@@ -1,0 +1,28 @@
+"""Paper Fig. 1 — hardware requirement challenges.
+
+(a) normalized KV cache size vs sequence length under common optimization
+    stacks (GQA, quantization; sparsity does not shrink storage);
+(b) memory capacity & bandwidth requirement scaling with batch size, with
+    and without KV sharing — the motivation for Shared KV Attention.
+Emits CSV rows: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+from repro.core import analytical as A
+
+
+def run(emit):
+    seqs = [2**i for i in range(14, 25, 2)]
+    fig1a = A.kv_cache_size_fig1a(seqs)
+    base16m = fig1a["MHA fp16"][-1]
+    for name, vals in fig1a.items():
+        emit(f"fig1a/{name.replace(' ', '_')}@16M", 0.0,
+             f"{vals[-1] / base16m:.4f}x_of_MHA_fp16")
+
+    batches = [1, 4, 16, 64, 256]
+    fig1b = A.bandwidth_scaling_fig1b(batches)
+    for name in ("capacity_no_share", "capacity_shared",
+                 "bandwidth_shared_gemv", "bandwidth_shared_gemm"):
+        v = fig1b[name]
+        emit(f"fig1b/{name}_scaling_b1_to_b256", 0.0,
+             f"{v[-1] / max(v[0], 1e-9):.1f}x")

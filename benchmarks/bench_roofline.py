@@ -1,0 +1,37 @@
+"""§Roofline summary benchmark: reads results/dryrun/*.json (produced by
+launch/dryrun.py) and emits the three roofline terms + dominant bottleneck
+per (arch x shape x mesh). Run the dry-run first; rows appear only for
+existing records.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun_final")
+
+
+def run(emit):
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        emit("roofline/no_dryrun_records_found_run_launch.dryrun", 0.0, 0)
+        return
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            emit(f"roofline/{tag}/skipped", 0.0, r.get("reason", "")[:60])
+            continue
+        if r["status"] != "ok":
+            emit(f"roofline/{tag}/ERROR", 0.0, r.get("error", "")[:60])
+            continue
+        roof = r["roofline"]
+        emit(f"roofline/{tag}/compute_s", 0.0, f"{roof['compute_s']:.3e}")
+        emit(f"roofline/{tag}/memory_s", 0.0, f"{roof['memory_s']:.3e}")
+        emit(f"roofline/{tag}/collective_s", 0.0,
+             f"{roof['collective_s']:.3e}")
+        emit(f"roofline/{tag}/dominant", 0.0, roof["dominant"])
+        emit(f"roofline/{tag}/useful_flops", 0.0,
+             f"{100 * roof['useful_flops_ratio']:.1f}%")

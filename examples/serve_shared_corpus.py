@@ -1,0 +1,47 @@
+"""End-to-end serving driver (deliverable (b)): a MoSKA engine serving
+batched requests over two registered domain corpora with continuous
+batching + corpus-affinity scheduling. This is the paper's deployment
+story at reduced scale: corpora's KV precomputed once, concurrent
+requests' queries routed and GEMM-batched against the shared chunks.
+
+    PYTHONPATH=src python examples/serve_shared_corpus.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.scheduler import wave_stats
+from repro.data.pipeline import CorpusSpec, synthesize_corpus
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, ServingEngine
+
+cfg = get_config("qwen1.5-0.5b").reduced()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+eng = ServingEngine(cfg, params, EngineConfig(max_slots=4, max_seq=96))
+
+for cid, seed in (("laws", 1), ("medical", 2)):
+    corpus = synthesize_corpus(CorpusSpec(cid, 512, cfg.vocab_size, seed))
+    t0 = time.perf_counter()
+    n = eng.register_corpus(cid, corpus)
+    print(f"registered corpus {cid!r}: {n} chunks "
+          f"({time.perf_counter() - t0:.1f}s, one-time)")
+
+rng = np.random.default_rng(0)
+for i in range(10):
+    cid = "laws" if i % 3 else "medical"
+    eng.submit(rng.integers(0, cfg.vocab_size, 10).tolist(),
+               max_new_tokens=8, corpus_id=cid)
+
+t0 = time.perf_counter()
+done = eng.run()
+wall = time.perf_counter() - t0
+print(f"finished {len(done)} requests in {wall:.1f}s — "
+      f"{eng.metrics['tokens_generated']} tokens, "
+      f"{eng.metrics['decode_steps']} decode waves "
+      f"(batched {eng.metrics['tokens_generated'] / eng.metrics['decode_steps']:.1f} tok/wave)")
+print("wave stats:", wave_stats(done))
+for r in done[:3]:
+    print(f"  req {r.uid} [{r.corpus_id}]: {r.generated}")

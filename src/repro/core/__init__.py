@@ -1,0 +1,20 @@
+"""MoSKA core — the paper's contribution as composable JAX modules.
+
+  shared_kv          persistent shared-KV chunk store ("experts")
+  router             training-free top-k chunk routing (inner product)
+  shared_attention   the batched GEMM Shared KV Attention + gather oracle
+  moska_attention    unique ⊕ shared LSE-merged mixture attention
+  disagg             explicit disaggregated (shard_map) execution
+  scheduler          continuous batching w/ corpus affinity
+  analytical         the paper's §IV analytical performance model
+"""
+from repro.core.moska_attention import (  # noqa: F401
+    MoskaLayerContext, moska_decode_attention, moska_prefill_attention,
+)
+from repro.core.router import Routing, dispatch_plan, route  # noqa: F401
+from repro.core.shared_attention import (  # noqa: F401
+    SharedPartial, shared_attention_batched, shared_attention_gather_ref,
+)
+from repro.core.shared_kv import (  # noqa: F401
+    SharedKVStore, abstract_store, build_store, chunk_embeddings,
+)

@@ -1,0 +1,78 @@
+"""MoE-inspired, training-free chunk router (paper §III.B).
+
+Relevance = inner product between the query and precomputed chunk
+embeddings (mean chunk key), exactly the lightweight scheme of
+LongHeads/MoBA the paper adopts. Top-k chunks are selected per *query
+group* (a single decode token, or a block of prefill queries), so all
+queries in a group hit the same chunks and batch into one GEMM.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Routing(NamedTuple):
+    chunk_ids: jax.Array     # (G, K) int32 — selected chunk per query group
+    scores: jax.Array        # (G, K) fp32  — router scores of the selection
+    full_scores: jax.Array   # (G, E) fp32  — all scores (for diagnostics)
+
+
+def route(q_group: jax.Array, emb: jax.Array, top_k: int) -> Routing:
+    """q_group: (G, H, D) pooled query per group; emb: (E, KH, D).
+
+    Scores are summed over heads after GQA-group alignment: every q head
+    scores its kv head's chunk embedding; per-group scalar per chunk.
+    """
+    G, H, D = q_group.shape
+    E, KH, _ = emb.shape
+    g = H // KH
+    qg = q_group.reshape(G, KH, g, D).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(D)
+    # (G, KH, g, D) x (E, KH, D) -> (G, E): sum relevance over heads
+    s = jnp.einsum("gkhd,ekd->ge", qg, emb.astype(jnp.float32)) * scale
+    top_k = min(top_k, E)
+    scores, ids = jax.lax.top_k(s, top_k)
+    return Routing(ids.astype(jnp.int32), scores, s)
+
+
+def route_blocks(q: jax.Array, emb: jax.Array, top_k: int,
+                 block: int) -> Routing:
+    """Prefill routing: pool queries into blocks of ``block`` then route.
+
+    q: (S, H, D) -> groups (S/block, H, D) by mean pooling.
+    """
+    S, H, D = q.shape
+    nb = S // block
+    pooled = jnp.mean(q[: nb * block].reshape(nb, block, H, D), axis=1)
+    return route(pooled, emb, top_k)
+
+
+def dispatch_plan(chunk_ids: jax.Array, num_chunks: int,
+                  capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Invert routing: for each (group, k) slot compute its position within
+    the destination chunk's query batch — the MoE-style capacity dispatch
+    that realizes the paper's GEMM batching.
+
+    Returns (flat_chunk, pos_in_chunk, keep) over the flattened (G*K,) slots.
+    Slots beyond ``capacity`` are dropped (contribute -inf LSE downstream).
+    """
+    G, K = chunk_ids.shape
+    flat = chunk_ids.reshape(-1)                              # (G*K,)
+    onehot = jax.nn.one_hot(flat, num_chunks, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                      # (G*K, E)
+    pos = jnp.sum(pos * onehot, axis=1)                       # (G*K,)
+    keep = pos < capacity
+    return flat, pos, keep
+
+
+def required_capacity(num_groups: int, top_k: int, num_chunks: int,
+                      capacity_factor: float) -> int:
+    """Per-chunk query capacity; >= ceil(G*K/E) * cf, MXU-aligned to 8."""
+    mean = num_groups * top_k / max(num_chunks, 1)
+    cap = int(math.ceil(mean * capacity_factor))
+    cap = max(cap, min(num_groups, 8))
+    return int(math.ceil(cap / 8) * 8)

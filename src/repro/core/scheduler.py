@@ -1,0 +1,134 @@
+"""Request scheduler for the MoSKA serving engine.
+
+Slot-based continuous batching (static shapes for jit): a wave has B slots;
+finished slots are refilled from the admission queue. Admission respects the
+memory budget computed from the analytical model's capacity terms (unique KV
+per request + resident shared stores), i.e. the scheduler enforces the
+"batch scaling capability" of Fig. 4 at run time.
+
+Chunk-level batching (queries grouped per shared chunk) happens *inside*
+the attention (core/shared_attention.py); the scheduler's job is request
+lifecycle + corpus affinity: requests over the same shared corpus are
+steered into the same wave so the batched GEMM sees maximal N.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int
+    corpus_id: Optional[str] = None      # shared KV store this request uses
+    arrival: float = 0.0
+    # lifecycle
+    generated: List[int] = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.generated)
+
+
+@dataclass
+class SchedulerConfig:
+    max_slots: int = 8
+    mem_budget_bytes: float = float("inf")
+    unique_bytes_per_token: int = 0      # cfg.kv_bytes_per_token
+    max_seq: int = 2048
+    corpus_affinity: bool = True
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.queue: Deque[Request] = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * cfg.max_slots
+        self.finished: List[Request] = []
+        self._uid = itertools.count()
+        self.resident_corpus: Optional[str] = None
+        self.shared_bytes: float = 0.0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               corpus_id: Optional[str] = None) -> int:
+        uid = next(self._uid)
+        self.queue.append(Request(uid, list(prompt), max_new_tokens,
+                                  corpus_id))
+        return uid
+
+    def _slot_cost(self) -> float:
+        return self.cfg.unique_bytes_per_token * self.cfg.max_seq
+
+    def _used_bytes(self) -> float:
+        n = sum(1 for s in self.slots if s is not None)
+        return self.shared_bytes + n * self._slot_cost()
+
+    def admissible(self) -> bool:
+        return self._used_bytes() + self._slot_cost() <= \
+            self.cfg.mem_budget_bytes
+
+    # ------------------------------------------------------------------
+    def schedule(self) -> List[Request]:
+        """Fill free slots from the queue; returns newly admitted requests
+        (they need a prefill before joining the decode wave)."""
+        admitted: List[Request] = []
+        for i, s in enumerate(self.slots):
+            if s is not None or not self.queue:
+                continue
+            if not self.admissible():
+                break
+            req = self._pick_next()
+            if req is None:
+                break
+            req.slot = i
+            self.slots[i] = req
+            admitted.append(req)
+        return admitted
+
+    def _pick_next(self) -> Optional[Request]:
+        if not self.queue:
+            return None
+        if not self.cfg.corpus_affinity or self.resident_corpus is None:
+            req = self.queue.popleft()
+            self.resident_corpus = req.corpus_id
+            return req
+        # prefer requests on the resident corpus: keeps the batched GEMM hot
+        for idx, r in enumerate(self.queue):
+            if r.corpus_id == self.resident_corpus:
+                del self.queue[idx]
+                return r
+        return self.queue.popleft()
+
+    # ------------------------------------------------------------------
+    def active(self) -> List[Request]:
+        return [s for s in self.slots if s is not None]
+
+    def record_token(self, req: Request, token: int, eos_id: int = -1):
+        req.generated.append(token)
+        if req.remaining <= 0 or token == eos_id:
+            req.done = True
+            self.finished.append(req)
+            self.slots[req.slot] = None
+            req.slot = -1
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)
+
+
+def wave_stats(reqs: List[Request]) -> Dict[str, float]:
+    """Chunk-batching diagnostics: how much GEMM batching a wave provides."""
+    by_corpus = collections.Counter(r.corpus_id for r in reqs)
+    return {
+        "wave_size": len(reqs),
+        "distinct_corpora": len(by_corpus),
+        "max_corpus_batch": max(by_corpus.values()) if by_corpus else 0,
+    }

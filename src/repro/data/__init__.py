@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    CorpusSpec, SyntheticLMDataset, make_train_batches, synthesize_corpus,
+)

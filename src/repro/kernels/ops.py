@@ -1,0 +1,42 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True (CPU container validates kernel bodies in
+Python); on a real TPU deployment set ``repro.kernels.ops.INTERPRET = False``
+or pass interpret=False explicitly — the kernels are written for the TPU
+target (BlockSpec VMEM tiling, MXU-aligned tiles).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attn import decode_attention as _decode
+from repro.kernels.lse_merge import lse_merge as _merge
+from repro.kernels.router_score import router_scores as _router
+from repro.kernels.shared_chunk_attn import (
+    shared_chunk_attention as _shared)
+
+INTERPRET = True
+
+
+def shared_chunk_attention(qd, k, v, qmask, *, block_c: int = 512,
+                           interpret: bool | None = None):
+    it = INTERPRET if interpret is None else interpret
+    return _shared(qd, k, v, qmask, block_c=block_c, interpret=it)
+
+
+def decode_attention(q, k, v, kv_len, *, block_s: int = 1024,
+                     interpret: bool | None = None):
+    it = INTERPRET if interpret is None else interpret
+    return _decode(q, k, v, kv_len, block_s=block_s, interpret=it)
+
+
+def lse_merge(outs, lses, *, block_n: int = 256,
+              interpret: bool | None = None):
+    it = INTERPRET if interpret is None else interpret
+    return _merge(outs, lses, block_n=block_n, interpret=it)
+
+
+def router_scores(q, emb, *, block_g: int = 128, block_e: int = 512,
+                  interpret: bool | None = None):
+    it = INTERPRET if interpret is None else interpret
+    return _router(q, emb, block_g=block_g, block_e=block_e, interpret=it)

@@ -1,0 +1,3 @@
+from repro.kvcache.cache import (  # noqa: F401
+    KVCache, abstract_kv_cache, append_token, init_kv_cache, write_prefix,
+)

@@ -1,0 +1,73 @@
+"""Unique (per-request) KV cache — the paper's 'Unique KV' pool.
+
+Layout is layer-stacked so the decoder ``lax.scan`` consumes one layer slice
+per step: k/v (L, B, S, KH, D), lengths (B,). Sharded batch-major at serve
+time (each device owns its requests = the Unique-KV node of Fig. 3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (L, B, S, KH, D)
+    v: jax.Array          # (L, B, S, KH, D)
+    length: jax.Array     # (B,) int32 — valid tokens in *this buffer*
+    offset: jax.Array     # (B,) int32 — absolute position of buffer slot 0
+                          # (= shared-corpus length when a store precedes it)
+
+    @property
+    def max_seq(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def positions(self) -> jax.Array:
+        """Absolute position of the next token per request."""
+        return self.offset + self.length
+
+
+def init_kv_cache(num_layers: int, batch: int, max_seq: int, kv_heads: int,
+                  head_dim: int, dtype=jnp.bfloat16) -> KVCache:
+    shape = (num_layers, batch, max_seq, kv_heads, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((batch,), jnp.int32),
+                   jnp.zeros((batch,), jnp.int32))
+
+
+def abstract_kv_cache(num_layers: int, batch: int, max_seq: int,
+                      kv_heads: int, head_dim: int,
+                      dtype=jnp.bfloat16) -> KVCache:
+    shape = (num_layers, batch, max_seq, kv_heads, head_dim)
+    sds = jax.ShapeDtypeStruct
+    return KVCache(sds(shape, dtype), sds(shape, dtype),
+                   sds((batch,), jnp.int32), sds((batch,), jnp.int32))
+
+
+def write_prefix(k_layer: jax.Array, v_layer: jax.Array, new_k: jax.Array,
+                 new_v: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Write a full prefix (B, S_new, KH, D) at position 0 (prefill)."""
+    S_new = new_k.shape[1]
+    k_layer = jax.lax.dynamic_update_slice_in_dim(
+        k_layer, new_k.astype(k_layer.dtype), 0, axis=1)
+    v_layer = jax.lax.dynamic_update_slice_in_dim(
+        v_layer, new_v.astype(v_layer.dtype), 0, axis=1)
+    return k_layer, v_layer
+
+
+def append_token(k_layer: jax.Array, v_layer: jax.Array, new_k: jax.Array,
+                 new_v: jax.Array, lengths: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Append one token per request at its current length.
+
+    k_layer: (B, S, KH, D); new_k: (B, KH, D); lengths: (B,).
+    """
+    def upd(cache_b, new_b, len_b):
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache_b, new_b[None].astype(cache_b.dtype), len_b, axis=0)
+
+    k_layer = jax.vmap(upd)(k_layer, new_k, lengths)
+    v_layer = jax.vmap(upd)(v_layer, new_v, lengths)
+    return k_layer, v_layer

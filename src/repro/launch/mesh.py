@@ -1,0 +1,35 @@
+"""Production meshes for the MoSKA deployment target (TPU v5e).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; everything else
+must see the real device count).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: Optional[int] = None):
+    """Degenerate mesh over whatever devices exist (tests/examples)."""
+    n = jax.device_count()
+    m = model_axis or 1
+    return jax.make_mesh((n // m, m), ("data", "model"))
+
+
+HW = {
+    "name": "tpu-v5e",
+    "peak_flops_bf16": 197e12,      # per chip
+    "hbm_bw": 819e9,                # per chip, bytes/s
+    "ici_link_bw": 50e9,            # per link, bytes/s
+    "hbm_bytes": 16e9,              # per chip
+    "chips_per_pod": 256,
+}

@@ -1,0 +1,80 @@
+"""Serving launcher: MoSKA engine over a shared corpus.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --reduced --requests 8 --corpus-tokens 512
+
+Registers a synthetic domain corpus (precomputed shared KV chunks), submits
+a stream of requests against it, and reports scheduler/throughput metrics.
+On TPU hardware the same engine runs under make_production_mesh with
+SERVE_RULES (unique KV batch-sharded = Unique pool; chunks data-sharded =
+Shared pool).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.scheduler import wave_stats
+from repro.data.pipeline import CorpusSpec, synthesize_corpus
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.sharding import SERVE_RULES, set_rules
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--corpus-tokens", type=int, default=512)
+    ap.add_argument("--kernel", default=None, choices=[None, "pallas"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_slots=args.slots, max_seq=args.max_seq, kernel=args.kernel))
+
+    corpus = synthesize_corpus(CorpusSpec(
+        "domain-0", args.corpus_tokens, cfg.vocab_size, seed=args.seed))
+    t0 = time.perf_counter()
+    nchunks = eng.register_corpus("domain-0", corpus)
+    print(f"registered corpus domain-0: {nchunks} chunks "
+          f"({time.perf_counter()-t0:.1f}s)")
+
+    rng = np.random.default_rng(args.seed)
+    for _ in range(args.requests):
+        eng.submit(rng.integers(0, cfg.vocab_size,
+                                args.prompt_len).tolist(),
+                   max_new_tokens=args.new_tokens, corpus_id="domain-0")
+
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    toks = eng.metrics["tokens_generated"]
+    print(json.dumps({
+        "finished": len(done),
+        "tokens": toks,
+        "decode_steps": eng.metrics["decode_steps"],
+        "tokens_per_s": toks / wall if wall else 0.0,
+        "wave": wave_stats(done),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

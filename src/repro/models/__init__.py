@@ -1,0 +1,1 @@
+# model registry is imported lazily to avoid import cycles during bring-up

@@ -1,0 +1,371 @@
+"""Dense / GQA decoder — covers the dense, vlm, and moe families.
+
+Pre-norm transformer with RoPE, GQA attention, SwiGLU FFN (or
+capacity-dispatch MoE), layer stack folded with ``jax.lax.scan`` so HLO size
+is depth-independent (mandatory for the 88-layer Mistral-Large dry-run).
+
+MoSKA integration: at prefill/decode, when a ``SharedKVStore`` is attached,
+each layer routes its queries over the layer's shared chunks and merges the
+batched shared partial with the unique partial (core/moska_attention.py).
+
+VLM (internvl2): the stub vision frontend delivers patch embeddings
+(B, P, d_model) which are prepended to the token embeddings; loss masks the
+patch positions. No cross-attention (InternVL2 is decoder-inline).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import moska_attention as MA
+from repro.core import router as router_lib
+from repro.core.shared_kv import SharedKVStore
+from repro.kvcache.cache import KVCache, append_token, write_prefix
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.sharding import lsc
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, key) -> Params:
+    ka, km, kd = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    p: Params = {
+        "ln1": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+        "ln2": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+        "attn": L.attn_init(ka, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                            cfg.head_dim, cfg.qkv_bias, dtype),
+    }
+    if cfg.moe.enabled:
+        p["moe"] = moe_lib.moe_init(km, cfg.d_model, cfg.d_ff, cfg.moe, dtype)
+        if cfg.moe.dense_residual:
+            p["mlp"] = L.mlp_init(kd, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["mlp"] = L.mlp_init(km, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, kl, ku = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(partial(_layer_init, cfg))(layer_keys)
+    params: Params = {
+        "embed": {"embed": jax.random.normal(
+            ke, (cfg.vocab_size, cfg.d_model), dtype) / math.sqrt(cfg.d_model)},
+        "layers": layers,
+        "final_norm": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = {"unembed": jax.random.normal(
+            ku, (cfg.vocab_size, cfg.d_model), dtype) / math.sqrt(cfg.d_model)}
+    return params
+
+
+def unembed_matrix(cfg: ModelConfig, params: Params) -> jax.Array:
+    if cfg.tie_embeddings or "unembed" not in params:
+        return params["embed"]["embed"]
+    return params["unembed"]["unembed"]
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _ffn(cfg: ModelConfig, lp: Params, x: jax.Array
+         ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, moe_aux)."""
+    B, S, d = x.shape
+    if cfg.moe.enabled:
+        y, aux = moe_lib.moe_ffn(x.reshape(B * S, d), lp["moe"], cfg.moe)
+        y = y.reshape(B, S, d)
+        if cfg.moe.dense_residual:
+            y = y + L.swiglu_mlp(x, lp["mlp"])
+        return y, aux
+    return L.swiglu_mlp(x, lp["mlp"]), jnp.zeros((), jnp.float32)
+
+
+def _attn_out_proj(o: jax.Array, lp: Params) -> jax.Array:
+    """o: (B, S, H, D) or (B, H, D) -> project back to d_model."""
+    flat = o.reshape(*o.shape[:-2], -1)
+    return jnp.einsum("...h,hd->...d", flat, lp["attn"]["wo"])
+
+
+def _layer_train(cfg: ModelConfig, x: jax.Array, lp: Params,
+                 positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence causal layer (train / no-cache forward).
+
+    x: (B, S, d); positions: (S,) or (B, S). Returns (x_out, moe_aux).
+    """
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.rms_eps)
+    q, k, v = L.qkv_project(h, lp["attn"], cfg.num_heads, cfg.num_kv_heads,
+                            cfg.head_dim)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = lsc(q, "batch", "seq", "heads", None)
+    k = lsc(k, "batch", "seq", "kv_heads", None)
+    v = lsc(v, "batch", "seq", "kv_heads", None)
+    o = L.flash_attention(q, k, v, causal=True, window=cfg.attn_window,
+                          block_k=cfg.attn_block_k)
+    x = lsc(x + _attn_out_proj(o, lp), "batch", "seq_res", None)
+    h2 = L.rms_norm(x, lp["ln2"]["scale"], cfg.rms_eps)
+    y, aux = _ffn(cfg, lp, h2)
+    x = lsc(x + y, "batch", "seq_res", None)
+    return x, aux
+
+
+def _layer_prefill(cfg: ModelConfig, x: jax.Array, lp: Params,
+                   positions: jax.Array,
+                   kc: jax.Array, vc: jax.Array,
+                   shared: Optional[Tuple[jax.Array, jax.Array, jax.Array]],
+                   q_offset: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Prefill layer: causal attention + cache write + optional MoSKA path.
+
+    Returns (x_out, new_k_layer, new_v_layer, aux).
+    """
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.rms_eps)
+    q, k, v = L.qkv_project(h, lp["attn"], cfg.num_heads, cfg.num_kv_heads,
+                            cfg.head_dim)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = lsc(q, "batch", "seq", "heads", None)
+    kc, vc = write_prefix(kc, vc, k, v)
+
+    ctx = None
+    if shared is not None and cfg.moska.enabled:
+        sk, sv, semb = _shared_layer(shared, x.dtype)
+        B, S, H, D = q.shape
+        rb = min(128, S)
+        nb = S // rb
+        pooled = jnp.mean(q.reshape(B * nb, rb, H, D), axis=1)
+        routing = router_lib.route(pooled, semb, cfg.moska.top_k_chunks)
+        ctx = MA.MoskaLayerContext(sk, sv, routing)
+        o = MA.moska_prefill_attention(
+            q, k, v, ctx, cfg.moska, q_offset=q_offset,
+            window=cfg.attn_window, route_block=rb)
+    else:
+        o = L.flash_attention(q, k, v, causal=True, q_offset=q_offset,
+                              kv_offset=q_offset, window=cfg.attn_window)
+    x = x + lsc(_attn_out_proj(o, lp), "batch", "seq", None)
+    h2 = L.rms_norm(x, lp["ln2"]["scale"], cfg.rms_eps)
+    y, aux = _ffn(cfg, lp, h2)
+    x = x + lsc(y, "batch", "seq", None)
+    return x, kc, vc, aux
+
+
+def _layer_decode(cfg: ModelConfig, x: jax.Array, lp: Params,
+                  positions: jax.Array,
+                  kc: jax.Array, vc: jax.Array, lengths: jax.Array,
+                  shared: Optional[Tuple[jax.Array, jax.Array, jax.Array]],
+                  kernel: Optional[str] = None
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode layer: one token per request.
+
+    x: (B, d); positions: (B,) absolute position of the new token.
+    Returns (x_out, new_k_layer, new_v_layer).
+    """
+    B, d = x.shape
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.rms_eps)
+    q, k, v = L.qkv_project(h[:, None], lp["attn"], cfg.num_heads,
+                            cfg.num_kv_heads, cfg.head_dim)
+    q = L.apply_rope(q, positions[:, None], cfg.rope_theta)[:, 0]  # (B,H,D)
+    k = L.apply_rope(k, positions[:, None], cfg.rope_theta)[:, 0]
+    v = v[:, 0]
+    q = lsc(q, "batch", "heads", None)
+    kc, vc = append_token(kc, vc, k, v, lengths)
+    new_len = lengths + 1
+
+    ctx = None
+    if shared is not None and cfg.moska.enabled:
+        sk, sv, semb = _shared_layer(shared, x.dtype)
+        routing = router_lib.route(q, semb, cfg.moska.top_k_chunks)
+        ctx = MA.MoskaLayerContext(sk, sv, routing)
+    o = MA.moska_decode_attention(q, kc, vc, new_len, ctx, cfg.moska,
+                                  window=cfg.attn_window, kernel=kernel)
+    x = x + _attn_out_proj(o, lp)
+    h2 = L.rms_norm(x, lp["ln2"]["scale"], cfg.rms_eps)
+    y, _ = _ffn(cfg, lp, h2[:, None])
+    x = x + y[:, 0]
+    return x, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# full-model forwards (scan over layers)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 frontend_embeds: Optional[jax.Array] = None) -> jax.Array:
+    x = params["embed"]["embed"][tokens]
+    if frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    return lsc(x, "batch", "seq", None)
+
+
+def remat_policy(cfg: ModelConfig):
+    return {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[cfg.remat_policy]
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, x: jax.Array,
+                   positions: jax.Array, *, remat: bool = True
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Run the layer stack (train path). Returns (hidden, moe_aux_sum)."""
+    body_fn = partial(_layer_train, cfg)
+    if remat and cfg.remat_policy != "none":
+        body_fn = jax.checkpoint(body_fn, policy=remat_policy(cfg))
+
+    def scan_body(carry, lp):
+        x = carry
+        x, aux = body_fn(x, lp, positions)
+        return x, aux
+
+    x, auxs = jax.lax.scan(scan_body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+    return x, jnp.sum(auxs)
+
+
+def lm_loss(cfg: ModelConfig, params: Params, hidden: jax.Array,
+            targets: jax.Array, mask: jax.Array, *,
+            seq_chunk: int = 512) -> jax.Array:
+    """Chunked cross-entropy: never materializes (B, S, V) logits.
+
+    hidden: (B, S, d); targets/mask: (B, S). Vocab stays sharded over the
+    model axis inside each chunk.
+    """
+    B, S, d = hidden.shape
+    W = unembed_matrix(cfg, params)                          # (V, d)
+    seq_chunk = min(seq_chunk, S)
+    nck = S // seq_chunk
+    rem = S - nck * seq_chunk
+
+    def chunk_loss(h, t, m):
+        logits = jnp.einsum("bsd,vd->bsv", h, W,
+                            preferred_element_type=jnp.float32)
+        logits = lsc(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - ll) * m)
+
+    def body(carry, xs):
+        h, t, m = xs
+        return carry + chunk_loss(h, t, m), None
+
+    hs = hidden[:, : nck * seq_chunk].reshape(B, nck, seq_chunk, d)
+    ts = targets[:, : nck * seq_chunk].reshape(B, nck, seq_chunk)
+    ms = mask[:, : nck * seq_chunk].reshape(B, nck, seq_chunk)
+    total, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32),
+        (hs.swapaxes(0, 1), ts.swapaxes(0, 1), ms.swapaxes(0, 1)))
+    if rem:
+        total = total + chunk_loss(hidden[:, nck * seq_chunk:],
+                                   targets[:, nck * seq_chunk:],
+                                   mask[:, nck * seq_chunk:])
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+               *, remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens = batch["tokens"]
+    x = embed_inputs(cfg, params, tokens, batch.get("frontend_embeds"))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    hidden, aux = forward_hidden(cfg, params, x, positions, remat=remat)
+    P = S - tokens.shape[1]  # frontend positions carry no loss
+    hidden_txt = hidden[:, P:]
+    loss = lm_loss(cfg, params, hidden_txt, batch["targets"], batch["mask"])
+    total = loss + aux
+    return total, {"ce_loss": loss, "moe_aux": aux}
+
+
+def _shared_xs(cfg: ModelConfig, store: Optional[SharedKVStore]):
+    if store is None or not cfg.moska.enabled:
+        return None
+    d = {"k": store.k, "v": store.v, "emb": store.emb}
+    if store.quantized:
+        d["ks"] = store.k_scale
+        d["vs"] = store.v_scale
+    return d
+
+
+def _shared_layer(sh, dtype):
+    """Per-layer store slices; dequantizes int8 KV (the Pallas kernel does
+    this in-register on TPU; the jnp path materializes the dequant)."""
+    sk, sv, semb = sh["k"], sh["v"], sh["emb"]
+    if "ks" in sh:
+        sk = sk.astype(dtype) * sh["ks"][..., None].astype(dtype)
+        sv = sv.astype(dtype) * sh["vs"][..., None].astype(dtype)
+    return sk, sv, semb
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            cache: KVCache, store: Optional[SharedKVStore] = None,
+            frontend_embeds: Optional[jax.Array] = None,
+            start_pos: int = 0) -> Tuple[jax.Array, KVCache]:
+    """Process the unique prefix; returns (last-token logits, filled cache)."""
+    x = embed_inputs(cfg, params, tokens, frontend_embeds)
+    B, S, _ = x.shape
+    positions = start_pos + jnp.arange(S)
+    shared = _shared_xs(cfg, store)
+
+    def scan_body(x, xs):
+        if shared is not None:
+            lp, kc, vc, sh = xs
+        else:
+            lp, kc, vc = xs
+            sh = None
+        x, kc, vc, _ = _layer_prefill(cfg, x, lp, positions, kc, vc, sh,
+                                      jnp.asarray(start_pos))
+        return x, (kc, vc)
+
+    xs = ((params["layers"], cache.k, cache.v) if shared is None else
+          (params["layers"], cache.k, cache.v, shared))
+    x, (k_new, v_new) = jax.lax.scan(scan_body, x, xs)
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], unembed_matrix(cfg, params),
+                        preferred_element_type=jnp.float32)
+    lengths = jnp.full((B,), S, jnp.int32)
+    offsets = jnp.full((B,), start_pos, jnp.int32)
+    return logits, KVCache(k_new, v_new, lengths, offsets)
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: KVCache, store: Optional[SharedKVStore] = None,
+                positions: Optional[jax.Array] = None,
+                kernel: Optional[str] = None) -> Tuple[jax.Array, KVCache]:
+    """One decode step. tokens: (B,). Returns (logits (B, V), new cache)."""
+    x = params["embed"]["embed"][tokens]                     # (B, d)
+    x = lsc(x, "batch", None)
+    if positions is None:
+        positions = cache.positions                          # absolute (RoPE)
+    shared = _shared_xs(cfg, store)
+
+    def scan_body(x, xs):
+        if shared is not None:
+            lp, kc, vc, sh = xs
+        else:
+            lp, kc, vc = xs
+            sh = None
+        x, kc, vc = _layer_decode(cfg, x, lp, positions, kc, vc,
+                                  cache.length, sh, kernel=kernel)
+        return x, (kc, vc)
+
+    xs = ((params["layers"], cache.k, cache.v) if shared is None else
+          (params["layers"], cache.k, cache.v, shared))
+    x, (k_new, v_new) = jax.lax.scan(scan_body, x, xs)
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+    logits = jnp.einsum("bd,vd->bv", x, unembed_matrix(cfg, params),
+                        preferred_element_type=jnp.float32)
+    return logits, KVCache(k_new, v_new, cache.length + 1, cache.offset)

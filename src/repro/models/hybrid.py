@@ -1,0 +1,521 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local (MQA,
+sliding-window) attention in a 2:1 pattern [arXiv:2402.19427].
+
+Decode state is O(1) in context length: a ring-buffer window KV per
+attention layer and (lru state, conv tail) per recurrent layer — this is why
+the hybrid runs ``long_500k`` natively (DESIGN.md §4).
+
+Layers are unrolled in Python (38 layers; HLO stays modest because two of
+every three layers are recurrent), unlike the dense stack which scans.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding import lsc
+
+Params = Dict[str, Any]
+_LRU_C = 8.0
+
+
+def _pattern(cfg: ModelConfig):
+    cyc = cfg.hybrid.pattern
+    return [cyc[i % len(cyc)] for i in range(cfg.num_layers)]
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _rec_layer_init(cfg: ModelConfig, key) -> Params:
+    d, lw = cfg.d_model, _lru_width(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "ln1": {"scale": jnp.zeros((d,), dtype)},
+        "ln2": {"scale": jnp.zeros((d,), dtype)},
+        "lru_in": jax.random.normal(ks[0], (d, 2 * lw), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (4, lw), dtype) * 0.1,
+        "conv_b": jnp.zeros((lw,), dtype),
+        "lru_gate_w": jax.random.normal(ks[2], (lw, 2 * lw), dtype)
+            / math.sqrt(lw),
+        "lru_gate_b": jnp.zeros((2 * lw,), dtype),
+        # Λ init so a^c in (0.9, 0.999) as in Griffin
+        "lru_a": jnp.log(jnp.expm1(-jnp.log(
+            jnp.linspace(0.9, 0.999, lw).astype(jnp.float32)) / _LRU_C)),
+        "lru_out": jax.random.normal(ks[3], (lw, d), dtype) / math.sqrt(lw),
+        "mlp": L.mlp_init(ks[4], d, cfg.d_ff, dtype),
+    }
+
+
+def _attn_layer_init(cfg: ModelConfig, key) -> Params:
+    ka, km = jax.random.split(key)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ln1": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+        "ln2": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+        "attn": L.attn_init(ka, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                            cfg.head_dim, cfg.qkv_bias, dtype),
+        "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _cycle(cfg: ModelConfig):
+    return cfg.hybrid.pattern
+
+
+def _layout(cfg: ModelConfig):
+    """(n_superblocks, tail_kinds): layers = nsb full cycles + tail."""
+    k = len(_cycle(cfg))
+    nsb = cfg.num_layers // k
+    tail = _cycle(cfg)[: cfg.num_layers % k]
+    return nsb, tail
+
+
+def _tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    """Layer stack folded as SUPERBLOCKS (one pattern cycle each) so the
+    forward scans 12 superblocks instead of unrolling 38 layers — keeps
+    HLO size and compile time depth-independent (like the dense stack)."""
+    ke, kl = jax.random.split(key)
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(kl, cfg.num_layers)
+    nsb, tail = _layout(cfg)
+    cyc = _cycle(cfg)
+    k = len(cyc)
+    sb_rec, sb_attn = [], []
+    for s in range(nsb):
+        recs = [_rec_layer_init(cfg, keys[s * k + i])
+                for i, kind in enumerate(cyc) if kind != "attn"]
+        attns = [_attn_layer_init(cfg, keys[s * k + i])
+                 for i, kind in enumerate(cyc) if kind == "attn"]
+        sb_rec.append(_tree_stack(recs) if recs else {})
+        sb_attn.append(_tree_stack(attns) if attns else {})
+    tail_blocks = []
+    for i, kind in enumerate(tail):
+        init = _attn_layer_init if kind == "attn" else _rec_layer_init
+        tail_blocks.append(init(cfg, keys[nsb * k + i]))
+    return {
+        "embed": {"embed": jax.random.normal(
+            ke, (cfg.vocab_size, cfg.d_model), dtype) / math.sqrt(cfg.d_model)},
+        "super": {"rec": _tree_stack(sb_rec), "attn": _tree_stack(sb_attn)},
+        "tail": tail_blocks,
+        "final_norm": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _rglru_gates(x: jax.Array, lp: Params):
+    """x: (..., lw) post-conv branch input -> (log_a, gated_in)."""
+    gates = jnp.einsum("...l,lg->...g", x, lp["lru_gate_w"]) + lp["lru_gate_b"]
+    gates = lsc(gates, "batch", "seq", "state") if gates.ndim == 3 else gates
+    r, i = jnp.split(jax.nn.sigmoid(gates.astype(jnp.float32)), 2, axis=-1)
+    log_a = -_LRU_C * jax.nn.softplus(lp["lru_a"]) * r      # (..., lw) <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (
+        i * x.astype(jnp.float32))
+    return log_a, gated
+
+
+def _rglru_full(x: jax.Array, lp: Params, h0: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Associative scan over seq. x: (B, S, lw); h0: (B, lw)."""
+    log_a, b = _rglru_gates(x, lp)
+    a = jnp.exp(log_a)
+    # fold h0 into the first step: h_1 = a_1 h0 + b_1
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def _rglru_step(x: jax.Array, lp: Params, h: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, lw); h: (B, lw)."""
+    log_a, b = _rglru_gates(x, lp)
+    h_new = jnp.exp(log_a) * h + b
+    return h_new.astype(x.dtype), h_new
+
+
+def _conv_full(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1]] * w[i][None, None]
+               for i in range(W)) + b[None, None]
+
+
+def _rec_block_full(cfg, lp, x, h0):
+    """x: (B, S, d) -> (out, (conv_tail, h_final))."""
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.rms_eps)
+    xin = jnp.einsum("bsd,dl->bsl", h, lp["lru_in"])
+    xa, xb = jnp.split(xin, 2, axis=-1)
+    xa = lsc(xa, "batch", "seq", "state")   # lru width over model axis
+    xb = lsc(xb, "batch", "seq", "state")
+    xa_conv = _conv_full(xa, lp["conv_w"], lp["conv_b"])
+    y, h_fin = _rglru_full(xa_conv, lp, h0)
+    y = lsc(y, "batch", "seq", "state")
+    y = y * jax.nn.gelu(xb)
+    x = x + jnp.einsum("bsl,ld->bsd", y, lp["lru_out"])
+    h2 = L.rms_norm(x, lp["ln2"]["scale"], cfg.rms_eps)
+    x = x + L.geglu_mlp(h2, lp["mlp"])
+    conv_tail = xa[:, -(lp["conv_w"].shape[0] - 1):]
+    return x, (conv_tail, h_fin)
+
+
+def _rec_block_step(cfg, lp, x, conv_state, h):
+    """x: (B, d)."""
+    hn = L.rms_norm(x, lp["ln1"]["scale"], cfg.rms_eps)
+    xin = jnp.einsum("bd,dl->bl", hn, lp["lru_in"])
+    xa, xb = jnp.split(xin, 2, axis=-1)
+    full = jnp.concatenate([conv_state, xa[:, None].astype(conv_state.dtype)],
+                           axis=1)
+    xa_conv = (jnp.einsum("bwl,wl->bl", full, lp["conv_w"])
+               + lp["conv_b"]).astype(xa.dtype)
+    conv_state = full[:, 1:]
+    y, h = _rglru_step(xa_conv, lp, h)
+    y = y * jax.nn.gelu(xb)
+    x = x + jnp.einsum("bl,ld->bd", y, lp["lru_out"])
+    h2 = L.rms_norm(x, lp["ln2"]["scale"], cfg.rms_eps)
+    x = x + L.geglu_mlp(h2, lp["mlp"])
+    return x, conv_state, h
+
+
+# ---------------------------------------------------------------------------
+# local attention with ring-buffer window cache
+# ---------------------------------------------------------------------------
+
+def _attn_block_full(cfg, lp, x, positions):
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.rms_eps)
+    q, k, v = L.qkv_project(h, lp["attn"], cfg.num_heads, cfg.num_kv_heads,
+                            cfg.head_dim)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = lsc(q, "batch", "seq", "heads", None)
+    o = L.flash_attention(q, k, v, causal=True, window=cfg.hybrid.window,
+                          block_k=min(L.DEFAULT_BLOCK_K, cfg.hybrid.window))
+    x = x + jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], -1),
+                       lp["attn"]["wo"])
+    h2 = L.rms_norm(x, lp["ln2"]["scale"], cfg.rms_eps)
+    x = x + L.geglu_mlp(h2, lp["mlp"])
+    return x, (k, v)
+
+
+def _ring_write(rk, rv, rpos, k, v, positions):
+    """Write fresh (B, S, KH, D) keys at slots pos % W. Used at prefill."""
+    W = rk.shape[1]
+    S = k.shape[1]
+
+    def wr(rk_b, rv_b, rpos_b, k_b, v_b, pos_b):
+        slots = pos_b % W
+        rk_b = rk_b.at[slots].set(k_b.astype(rk_b.dtype))
+        rv_b = rv_b.at[slots].set(v_b.astype(rv_b.dtype))
+        rpos_b = rpos_b.at[slots].set(pos_b)
+        return rk_b, rv_b, rpos_b
+
+    return jax.vmap(wr)(rk, rv, rpos, k, v, positions)
+
+
+def _ring_attend(q, rk, rv, rpos, q_pos, window):
+    """q: (B, H, D); ring caches (B, W, KH, D); rpos: (B, W) abs positions
+    (-1 invalid); q_pos: (B,). Returns (B, H, D)."""
+    B, H, D = q.shape
+    KH = rk.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bwhd->bhgw", qg, rk,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (rpos >= 0) & (rpos <= q_pos[:, None]) & (
+        rpos > q_pos[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, L.NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgw,bwhd->bhgd", p.astype(rv.dtype), rv,
+                   preferred_element_type=jnp.float32)
+    return (o / jnp.maximum(l, 1e-37)[..., None]).reshape(B, H, D).astype(
+        q.dtype)
+
+
+def _attn_block_step(cfg, lp, x, rk, rv, rpos, q_pos):
+    """x: (B, d); q_pos: (B,) absolute position of the new token."""
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.rms_eps)
+    q, k, v = L.qkv_project(h[:, None], lp["attn"], cfg.num_heads,
+                            cfg.num_kv_heads, cfg.head_dim)
+    q = L.apply_rope(q, q_pos[:, None], cfg.rope_theta)[:, 0]
+    k = L.apply_rope(k, q_pos[:, None], cfg.rope_theta)[:, 0]
+    v = v[:, 0]
+    rk, rv, rpos = _ring_write(rk, rv, rpos, k[:, None], v[:, None],
+                               q_pos[:, None])
+    o = _ring_attend(q, rk, rv, rpos, q_pos, cfg.hybrid.window)
+    x = x + jnp.einsum("bh,hd->bd", o.reshape(x.shape[0], -1),
+                       lp["attn"]["wo"])
+    h2 = L.rms_norm(x, lp["ln2"]["scale"], cfg.rms_eps)
+    x = x + L.geglu_mlp(h2, lp["mlp"])
+    return x, rk, rv, rpos
+
+
+# ---------------------------------------------------------------------------
+# model-level API
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16, abstract: bool = False):
+    """max_seq is accepted for API parity; hybrid state is O(window)."""
+    lw = _lru_width(cfg)
+    W = cfg.hybrid.window
+    pat = _pattern(cfg)
+    n_attn = sum(1 for p in pat if p == "attn")
+    n_rec = len(pat) - n_attn
+    KH, D = cfg.num_kv_heads, cfg.head_dim
+    if abstract:
+        mk = jax.ShapeDtypeStruct
+        mkposfill = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+    else:
+        mk = lambda s, d: jnp.zeros(s, d)
+        mkposfill = lambda s: jnp.full(s, -1, jnp.int32)
+    return {
+        "ring_k": mk((n_attn, batch, W, KH, D), dtype),
+        "ring_v": mk((n_attn, batch, W, KH, D), dtype),
+        "ring_pos": mkposfill((n_attn, batch, W)),
+        "lru": mk((n_rec, batch, lw), jnp.float32),
+        "conv": mk((n_rec, batch, 3, lw), dtype),
+        "length": mk((batch,), jnp.int32),
+    }
+
+
+def _sel(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, x: jax.Array,
+                   positions: jax.Array, *, remat: bool = True):
+    lw = _lru_width(cfg)
+    B = x.shape[0]
+    h0 = jnp.zeros((B, lw), jnp.float32)
+    cyc = _cycle(cfg)
+    nsb, tail = _layout(cfg)
+
+    def sb_body(x, xs):
+        rec_p, attn_p = xs
+        ri = ai = 0
+        for kind in cyc:
+            if kind == "attn":
+                x = _attn_block_full(cfg, _sel(attn_p, ai), x, positions)[0]
+                ai += 1
+            else:
+                x = _rec_block_full(cfg, _sel(rec_p, ri), x, h0)[0]
+                ri += 1
+        return x, None
+
+    body = sb_body
+    if remat:
+        body = jax.checkpoint(
+            sb_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, (params["super"]["rec"],
+                                  params["super"]["attn"]))
+    for lp, kind in zip(params["tail"], tail):
+        if kind == "attn":
+            x = _attn_block_full(cfg, lp, x, positions)[0]
+        else:
+            x = _rec_block_full(cfg, lp, x, h0)[0]
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch, *, remat=True):
+    from repro.models.dense import lm_loss
+    tokens = batch["tokens"]
+    x = params["embed"]["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1])
+    hidden, _ = forward_hidden(cfg, params, x, positions, remat=remat)
+    loss = lm_loss(cfg, params, hidden, batch["targets"], batch["mask"])
+    return loss, {"ce_loss": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+
+def _counts(cfg: ModelConfig):
+    cyc = _cycle(cfg)
+    nsb, tail = _layout(cfg)
+    a_c = sum(1 for p in cyc if p == "attn")
+    r_c = len(cyc) - a_c
+    tail_a = sum(1 for p in tail if p == "attn")
+    tail_r = len(tail) - tail_a
+    return nsb, a_c, r_c, tail_a, tail_r
+
+
+def _split_sb(arr, nsb, per, tail_n):
+    """(n_total, ...) -> ((nsb, per, ...), (tail_n, ...))."""
+    head = arr[: nsb * per].reshape(nsb, per, *arr.shape[1:])
+    return head, arr[nsb * per:]
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, cache,
+            store=None, frontend_embeds=None, start_pos: int = 0):
+    x = params["embed"]["embed"][tokens]
+    B, S, _ = x.shape
+    positions = start_pos + jnp.arange(S)
+    lw = _lru_width(cfg)
+    W = cfg.hybrid.window
+    h0 = jnp.zeros((B, lw), jnp.float32)
+    cyc = _cycle(cfg)
+    nsb, a_c, r_c, tail_a, tail_r = _counts(cfg)
+    abs_pos = jnp.broadcast_to(positions[None], (B, S))
+    n = min(W, S)
+
+    def prefill_attn(lp, x, rk0, rv0, rp0):
+        x, (k, v) = _attn_block_full(cfg, lp, x, positions)
+        rk, rv, rpos = _ring_write(rk0, rv0, rp0, k[:, -n:], v[:, -n:],
+                                   abs_pos[:, -n:])
+        return x, (rk, rv, rpos)
+
+    def prefill_rec(lp, x):
+        x, (conv_tail, h_fin) = _rec_block_full(cfg, lp, x, h0)
+        ct = conv_tail
+        if ct.shape[1] < 3:   # short prefix: left-pad with zeros
+            ct = jnp.pad(ct, ((0, 0), (3 - ct.shape[1], 0), (0, 0)))
+        return x, (ct.astype(cache["conv"].dtype), h_fin)
+
+    rk_h, rk_t = _split_sb(cache["ring_k"], nsb, a_c, tail_a)
+    rv_h, rv_t = _split_sb(cache["ring_v"], nsb, a_c, tail_a)
+    rp_h, rp_t = _split_sb(cache["ring_pos"], nsb, a_c, tail_a)
+
+    def sb_body(x, xs):
+        rec_p, attn_p, rk0, rv0, rp0 = xs
+        ri = ai = 0
+        rks, rvs, rps, convs, lrus = [], [], [], [], []
+        for kind in cyc:
+            if kind == "attn":
+                x, (rk, rv, rp) = prefill_attn(_sel(attn_p, ai), x,
+                                               rk0[ai], rv0[ai], rp0[ai])
+                rks.append(rk); rvs.append(rv); rps.append(rp)
+                ai += 1
+            else:
+                x, (ct, h) = prefill_rec(_sel(rec_p, ri), x)
+                convs.append(ct); lrus.append(h)
+                ri += 1
+        return x, (jnp.stack(rks), jnp.stack(rvs), jnp.stack(rps),
+                   jnp.stack(convs), jnp.stack(lrus))
+
+    x, (rk_n, rv_n, rp_n, conv_n, lru_n) = jax.lax.scan(
+        sb_body, x, (params["super"]["rec"], params["super"]["attn"],
+                     rk_h, rv_h, rp_h))
+
+    rk_all = [rk_n.reshape(-1, *rk_n.shape[2:])]
+    rv_all = [rv_n.reshape(-1, *rv_n.shape[2:])]
+    rp_all = [rp_n.reshape(-1, *rp_n.shape[2:])]
+    conv_all = [conv_n.reshape(-1, *conv_n.shape[2:])]
+    lru_all = [lru_n.reshape(-1, *lru_n.shape[2:])]
+    nsb_, tail = _layout(cfg)
+    ti_a = 0
+    for i, (lp, kind) in enumerate(zip(params["tail"], tail)):
+        if kind == "attn":
+            x, (rk, rv, rp) = prefill_attn(lp, x, rk_t[ti_a], rv_t[ti_a],
+                                           rp_t[ti_a])
+            rk_all.append(rk[None]); rv_all.append(rv[None])
+            rp_all.append(rp[None])
+            ti_a += 1
+        else:
+            x, (ct, h) = prefill_rec(lp, x)
+            conv_all.append(ct[None]); lru_all.append(h[None])
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"]["embed"],
+                        preferred_element_type=jnp.float32)
+    new_cache = {
+        "ring_k": jnp.concatenate(rk_all),
+        "ring_v": jnp.concatenate(rv_all),
+        "ring_pos": jnp.concatenate(rp_all),
+        "lru": jnp.concatenate(lru_all),
+        "conv": jnp.concatenate(conv_all),
+        "length": jnp.full((B,), start_pos + S, jnp.int32),
+    }
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array, cache,
+                store=None, positions=None, kernel=None):
+    x = params["embed"]["embed"][tokens]
+    q_pos = cache["length"] if positions is None else positions
+    cyc = _cycle(cfg)
+    nsb, a_c, r_c, tail_a, tail_r = _counts(cfg)
+
+    rk_h, rk_t = _split_sb(cache["ring_k"], nsb, a_c, tail_a)
+    rv_h, rv_t = _split_sb(cache["ring_v"], nsb, a_c, tail_a)
+    rp_h, rp_t = _split_sb(cache["ring_pos"], nsb, a_c, tail_a)
+    cv_h, cv_t = _split_sb(cache["conv"], nsb, r_c, tail_r)
+    lr_h, lr_t = _split_sb(cache["lru"], nsb, r_c, tail_r)
+
+    def sb_body(x, xs):
+        rec_p, attn_p, rk0, rv0, rp0, cv0, lr0 = xs
+        ri = ai = 0
+        rks, rvs, rps, convs, lrus = [], [], [], [], []
+        for kind in cyc:
+            if kind == "attn":
+                x, rk, rv, rp = _attn_block_step(
+                    cfg, _sel(attn_p, ai), x, rk0[ai], rv0[ai], rp0[ai],
+                    q_pos)
+                rks.append(rk); rvs.append(rv); rps.append(rp)
+                ai += 1
+            else:
+                x, cs, h = _rec_block_step(cfg, _sel(rec_p, ri), x,
+                                           cv0[ri], lr0[ri])
+                convs.append(cs); lrus.append(h)
+                ri += 1
+        return x, (jnp.stack(rks), jnp.stack(rvs), jnp.stack(rps),
+                   jnp.stack(convs), jnp.stack(lrus))
+
+    x, (rk_n, rv_n, rp_n, conv_n, lru_n) = jax.lax.scan(
+        sb_body, x, (params["super"]["rec"], params["super"]["attn"],
+                     rk_h, rv_h, rp_h, cv_h, lr_h))
+
+    rk_all = [rk_n.reshape(-1, *rk_n.shape[2:])]
+    rv_all = [rv_n.reshape(-1, *rv_n.shape[2:])]
+    rp_all = [rp_n.reshape(-1, *rp_n.shape[2:])]
+    conv_all = [conv_n.reshape(-1, *conv_n.shape[2:])]
+    lru_all = [lru_n.reshape(-1, *lru_n.shape[2:])]
+    _, tail = _layout(cfg)
+    ti_a = ti_r = 0
+    for lp, kind in zip(params["tail"], tail):
+        if kind == "attn":
+            x, rk, rv, rp = _attn_block_step(
+                cfg, lp, x, rk_t[ti_a], rv_t[ti_a], rp_t[ti_a], q_pos)
+            rk_all.append(rk[None]); rv_all.append(rv[None])
+            rp_all.append(rp[None])
+            ti_a += 1
+        else:
+            x, cs, h = _rec_block_step(cfg, lp, x, cv_t[ti_r], lr_t[ti_r])
+            conv_all.append(cs[None]); lru_all.append(h[None])
+            ti_r += 1
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+    logits = jnp.einsum("bd,vd->bv", x, params["embed"]["embed"],
+                        preferred_element_type=jnp.float32)
+    new_cache = {
+        "ring_k": jnp.concatenate(rk_all),
+        "ring_v": jnp.concatenate(rv_all),
+        "ring_pos": jnp.concatenate(rp_all),
+        "lru": jnp.concatenate(lru_all),
+        "conv": jnp.concatenate(conv_all),
+        "length": cache["length"] + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,278 @@
+"""Shared building blocks: norms, RoPE, attention (flash-style blocked,
+sliding-window, decode), SwiGLU MLP.
+
+All functions are pure; parameters are dict pytrees. Activations default to
+bf16 with fp32 softmax/norm accumulation. ``lsc`` annotates logical sharding
+and is the identity when no rules are installed.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import lsc
+
+DEFAULT_BLOCK_K = 1024
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms / MLP
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def geglu_mlp(x: jax.Array, p: dict) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.gelu(h) * u
+    h = lsc(h, None, None, "d_ff")
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+def swiglu_mlp(x: jax.Array, p: dict) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.silu(h) * u
+    h = lsc(h, None, None, "d_ff")
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+def gelu_mlp(x: jax.Array, p: dict) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dt = x.dtype
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Blocked flash-style attention (pure jnp; the Pallas kernels in
+# repro.kernels are the TPU fast path, these are the reference/XLA path)
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: jax.Array,                # (B, Sq, H, D)
+    k: jax.Array,                # (B, Sk, KH, D)
+    v: jax.Array,                # (B, Sk, KH, D)
+    *,
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,   # absolute position of q[0]
+    kv_offset: jax.Array | int = 0,  # absolute position of k[0]
+    kv_len: Optional[jax.Array] = None,  # scalar valid kv length
+    window: int = 0,             # >0: sliding-window attention
+    block_k: int = DEFAULT_BLOCK_K,
+    return_lse: bool = False,
+):
+    """Online-softmax blocked attention; scans over KV blocks.
+
+    Memory-safe for 32K+ sequences: live buffers are O(Sq * block_k) per
+    (batch, head) rather than O(Sq * Sk).
+
+    GQA is handled by repeating KV heads to the full H (the standard
+    production layout): every intermediate then carries a flat head dim
+    that shards cleanly over the model axis. The earlier (B,KH,G,...)
+    grouped layout made SPMD split the model axis across two tensor dims
+    (e.g. 8x2 of 16), which the backward pass could not reshard without
+    XLA's "involuntary full rematerialization" fallback — replicating
+    global-batch activations (§Perf, mistral hillclimb iteration 2).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+
+    nblk = max(1, (Sk + block_k - 1) // block_k)
+    pad = nblk * block_k - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)                        # (B, Sk, H, D)
+        v = jnp.repeat(v, G, axis=2)
+    kb = k.reshape(B, nblk, block_k, H, D).swapaxes(0, 1)
+    vb = v.reshape(B, nblk, block_k, H, D).swapaxes(0, 1)
+
+    q_pos = jnp.asarray(q_offset) + jnp.arange(Sq)          # (Sq,)
+    valid_len = Sk if kv_len is None else kv_len
+
+    def body(carry, blk):
+        m, l, acc, idx = carry
+        kblk, vblk = blk
+        k_idx = idx * block_k + jnp.arange(block_k)   # local buffer index
+        k_pos = jnp.asarray(kv_offset) + k_idx        # absolute position
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            mask = k_pos[None, :] <= q_pos[:, None]
+        else:
+            mask = jnp.ones((Sq, block_k), bool)
+        if window:
+            mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        mask &= (k_idx < valid_len)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)          # (B,H,Sq,Bk)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new, idx + 1), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, jnp.int32(0)),
+                                     (kb, vb))
+    l_safe = jnp.maximum(l, 1e-37)
+    out = jnp.transpose(acc / l_safe[..., None], (0, 2, 1, 3))  # (B,Sq,H,D)
+    out = out.astype(q.dtype)
+    if return_lse:
+        lse = jnp.transpose(m + jnp.log(l_safe), (0, 2, 1))  # (B,Sq,H)
+        return out, lse
+    return out
+
+
+def decode_attention(
+    q: jax.Array,          # (B, H, D) one new token per request
+    k_cache: jax.Array,    # (B, S, KH, D)
+    v_cache: jax.Array,    # (B, S, KH, D)
+    kv_len: jax.Array,     # (B,) valid lengths
+    *,
+    window: int = 0,
+    return_lse: bool = False,
+):
+    """Single-token decode attention over a per-request (unique) KV cache.
+
+    This is the paper's memory-bound GEMV path (Fig. 2a, 'Unique KV
+    Attention'); the Pallas `decode_attn` kernel is the TPU fast path.
+    """
+    B, H, D = q.shape
+    _, S, KH, _ = k_cache.shape
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)[None, :]
+    mask = pos < kv_len[:, None]
+    if window:
+        mask &= pos >= (kv_len[:, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = (out / jnp.maximum(l, 1e-37)[..., None]).reshape(B, H, D)
+    if return_lse:
+        lse = (m + jnp.log(jnp.maximum(l, 1e-37))).reshape(B, H)
+        return out.astype(q.dtype), lse
+    return out.astype(q.dtype)
+
+
+def merge_partial_attention(outs, lses):
+    """Merge flash-decoding partials: lists of (…, H, D) outs and (…, H) lses.
+
+    Reference semantics for the `lse_merge` Pallas kernel; exactness: the
+    merged result equals softmax over the concatenated key sets.
+    """
+    lse = jnp.stack(lses, axis=0).astype(jnp.float32)        # (P, ..., H)
+    o = jnp.stack(outs, axis=0).astype(jnp.float32)          # (P, ..., H, D)
+    m = jnp.max(lse, axis=0, keepdims=True)
+    w = jnp.exp(lse - m)                                     # (P, ..., H)
+    denom = jnp.sum(w, axis=0)
+    out = jnp.sum(o * w[..., None], axis=0) / jnp.maximum(denom, 1e-37)[..., None]
+    new_lse = jnp.squeeze(m, 0) + jnp.log(jnp.maximum(denom, 1e-37))
+    return out.astype(outs[0].dtype), new_lse
+
+
+# ---------------------------------------------------------------------------
+# Attention parameter helpers
+# ---------------------------------------------------------------------------
+
+def attn_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, qkv_bias: bool, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    p = {
+        "wq": jax.random.normal(kq, (d_model, num_heads * head_dim), dtype) * s,
+        "wk": jax.random.normal(kk, (d_model, num_kv_heads * head_dim), dtype) * s,
+        "wv": jax.random.normal(kv, (d_model, num_kv_heads * head_dim), dtype) * s,
+        "wo": jax.random.normal(ko, (num_heads * head_dim, d_model), dtype) * s,
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def qkv_project(x: jax.Array, p: dict, num_heads: int, num_kv_heads: int,
+                head_dim: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("...d,dh->...h", x, p["wq"])
+    k = jnp.einsum("...d,dh->...h", x, p["wk"])
+    v = jnp.einsum("...d,dh->...h", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(*x.shape[:-1], num_heads, head_dim)
+    k = k.reshape(*x.shape[:-1], num_kv_heads, head_dim)
+    v = v.reshape(*x.shape[:-1], num_kv_heads, head_dim)
+    return q, k, v
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, gated: bool = True) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+    }
+    if gated:
+        p["w_gate"] = jax.random.normal(k1, (d_model, d_ff), dtype) * s_in
+    return p

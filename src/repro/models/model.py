@@ -1,0 +1,79 @@
+"""Model facade: dispatches the family-specific implementations behind one
+API used by training, serving, launch, and tests.
+
+    model = build_model(cfg)
+    params = model.init(key)
+    loss, metrics = model.train_loss(params, batch)
+    cache = model.init_cache(batch_size, max_seq)
+    logits, cache = model.prefill(params, tokens, cache, store=...)
+    logits, cache = model.decode_step(params, tokens, cache, store=...)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (AUDIO, DENSE, HYBRID, MOE, SSM, VLM,
+                                ModelConfig)
+from repro.kvcache.cache import abstract_kv_cache, init_kv_cache
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.family in (DENSE, VLM, MOE):
+            from repro.models import dense as impl
+        elif cfg.family == SSM:
+            from repro.models import ssm as impl
+        elif cfg.family == HYBRID:
+            from repro.models import hybrid as impl
+        elif cfg.family == AUDIO:
+            from repro.models import encdec as impl
+        else:
+            raise ValueError(cfg.family)
+        self._impl = impl
+
+    # ------------------------------------------------------------------
+    def init(self, key):
+        return self._impl.init_params(self.cfg, key)
+
+    def abstract_params(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda k: self._impl.init_params(self.cfg, k),
+                              key)
+
+    def train_loss(self, params, batch: Dict[str, Any], *, remat: bool = True):
+        return self._impl.train_loss(self.cfg, params, batch, remat=remat)
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                   abstract: bool = False):
+        cfg = self.cfg
+        if cfg.family in (DENSE, VLM, MOE):
+            fn = abstract_kv_cache if abstract else init_kv_cache
+            return fn(cfg.num_layers, batch, max_seq, cfg.num_kv_heads,
+                      cfg.head_dim, dtype)
+        return self._impl.init_cache(cfg, batch, max_seq, dtype,
+                                     abstract=abstract)
+
+    def prefill(self, params, tokens, cache, store=None,
+                frontend_embeds=None, start_pos: int = 0):
+        if self.cfg.family in (VLM, AUDIO):
+            return self._impl.prefill(self.cfg, params, tokens, cache,
+                                      store=store,
+                                      frontend_embeds=frontend_embeds,
+                                      start_pos=start_pos)
+        return self._impl.prefill(self.cfg, params, tokens, cache,
+                                  store=store, start_pos=start_pos)
+
+    def decode_step(self, params, tokens, cache, store=None, positions=None,
+                    kernel: Optional[str] = None):
+        return self._impl.decode_step(self.cfg, params, tokens, cache,
+                                      store=store, positions=positions,
+                                      kernel=kernel)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,320 @@
+"""Mamba-2 (SSD — state-space duality) blocks [arXiv:2405.21060].
+
+Attention-free: MoSKA's shared-KV mechanism is inapplicable (DESIGN.md
+§Arch-applicability); the analogue provided is ``shared_state`` warm-start —
+a precomputed SSM state summarizing a shared prefix, installed as the decode
+initial state (the SSM rendering of prefix reuse; it summarizes rather than
+indexes the corpus, so there is no routed sparse analogue).
+
+Implements the chunked SSD algorithm (block decomposition of the
+semiseparable matrix): intra-chunk quadratic part + inter-chunk state
+recurrence via ``lax.scan``; single-step recurrence for decode.
+
+Cache pytree: {"conv": (L, B, W-1, conv_dim), "state": (L, B, NH, P, N),
+"length": (B,)}.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding import lsc
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    d_inner = cfg.d_model * cfg.ssm.expand
+    P = cfg.ssm.head_dim
+    NH = d_inner // P
+    N = cfg.ssm.state_dim
+    conv_dim = d_inner + 2 * N          # conv over [x, B, C]
+    return d_inner, P, NH, N, conv_dim
+
+
+def _layer_init(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    di, P, NH, N, conv_dim = _dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * N + NH        # z, x, B, C, dt
+    s = 1.0 / math.sqrt(d)
+    return {
+        "ln1": {"scale": jnp.zeros((d,), dtype)},
+        "in_proj": jax.random.normal(k1, (d, in_dim), dtype) * s,
+        "conv_w": jax.random.normal(k2, (cfg.ssm.conv_width, conv_dim),
+                                    dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, NH).astype(jnp.float32)),
+        "d_skip": jnp.ones((NH,), jnp.float32),
+        "dt_bias": jnp.zeros((NH,), jnp.float32) + math.log(math.e - 1),
+        "gate_norm": {"scale": jnp.zeros((di,), dtype)},
+        "out_proj": jax.random.normal(k4, (di, d), dtype) / math.sqrt(di),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, kl = jax.random.split(key)
+    dtype = jnp.dtype(cfg.dtype)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    return {
+        "embed": {"embed": jax.random.normal(
+            ke, (cfg.vocab_size, cfg.d_model), dtype) / math.sqrt(cfg.d_model)},
+        "layers": jax.vmap(partial(_layer_init, cfg))(layer_keys),
+        "final_norm": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array, h0: jax.Array, chunk: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B, S, NH, P); dt: (B, S, NH) (post-softplus); A: (NH,) negative;
+    Bm/Cm: (B, S, N); h0: (B, NH, P, N). Returns (y: (B,S,NH,P), h_final).
+    """
+    Bsz, S, NH, P = x.shape
+    N = Bm.shape[-1]
+    S_orig = S
+    rem = S % chunk
+    if rem:
+        # pad with dt=0 steps: a=exp(0)=1 (state unchanged), contribution 0
+        pad = chunk - rem
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nck = S // chunk
+
+    xc = x.reshape(Bsz, nck, chunk, NH, P).swapaxes(0, 1)
+    dtc = dt.reshape(Bsz, nck, chunk, NH).swapaxes(0, 1)
+    Bc = Bm.reshape(Bsz, nck, chunk, N).swapaxes(0, 1)
+    Cc = Cm.reshape(Bsz, nck, chunk, N).swapaxes(0, 1)
+
+    def body(h, xs):
+        xq, dtq, Bq, Cq = xs                       # (B, Q, NH, P) etc.
+        la = dtq * A[None, None, :]                # (B, Q, NH) log a_t <= 0
+        s_cum = jnp.cumsum(la, axis=1)             # (B, Q, NH) = s_t
+        # inter: y_t += C_t . exp(s_t) h_prev
+        decay_t = jnp.exp(s_cum)                   # (B, Q, NH)
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", Cq, h) * decay_t[..., None]
+        # intra: y_t += sum_{s<=t} exp(s_t - s_s) dt_s (C_t.B_s) x_s
+        # L[t,s] per head; mask BEFORE exp (future entries have diff>0 and
+        # would overflow — and exp-then-mask leaks inf into gradients)
+        diff = s_cum[:, :, None, :] - s_cum[:, None, :, :]  # (B, Q, Q, NH)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        diff = jnp.where(tri[None, :, :, None], diff, -1e30)
+        Lmat = jnp.exp(diff)
+        cb = jnp.einsum("bqn,bsn->bqs", Cq, Bq)             # (B, Q, Q)
+        att = cb[..., None] * Lmat * dtq[:, None, :, :]     # (B,Q,Q,NH)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", att, xq)
+        # state update: h = exp(s_Q) h + sum_s exp(s_Q - s_s) dt_s B_s x_s
+        decay_rest = jnp.exp(s_cum[:, -1:, :] - s_cum)      # (B, Q, NH)
+        w = dtq * decay_rest                                # (B, Q, NH)
+        dh = jnp.einsum("bqh,bqn,bqhp->bhpn", w, Bq, xq)
+        h_new = h * jnp.exp(s_cum[:, -1])[..., None, None] + dh
+        return h_new, y_inter + y_intra
+
+    h, yc = jax.lax.scan(body, h0, (xc, dtc, Bc, Cc))
+    y = yc.swapaxes(0, 1).reshape(Bsz, S, NH, P)[:, :S_orig]
+    return y, h
+
+
+def _ssd_step(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+              Cm: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. x: (B, NH, P); dt: (B, NH); Bm/Cm: (B, N)."""
+    a = jnp.exp(dt * A[None, :])                             # (B, NH)
+    dh = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm, x)
+    h_new = h * a[..., None, None] + dh
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h_new)
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di, P, NH, N, _ = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _conv_full(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Causal depthwise conv over (B, S, C) with kernel (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i][None, None] for i in range(W))
+    return jax.nn.silu(out + b[None, None])
+
+
+def _conv_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+               b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x_t: (B, C); conv_state: (B, W-1, C) past inputs."""
+    full = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", full, w) + b[None]
+    return jax.nn.silu(out), full[:, 1:]
+
+
+def _block_full(cfg: ModelConfig, lp: Params, x: jax.Array,
+                h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). Returns (out, h_final)."""
+    di, P, NH, N, _ = _dims(cfg)
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.rms_eps)
+    proj = jnp.einsum("bsd,de->bse", h, lp["in_proj"])
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _conv_full(xbc, lp["conv_w"], lp["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["a_log"])
+    xh = xs.reshape(*xs.shape[:2], NH, P).astype(jnp.float32)
+    y, h_fin = _ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                            Cm.astype(jnp.float32), h0, cfg.ssm.chunk_size)
+    y = y + xh * lp["d_skip"][None, None, :, None]
+    y = y.reshape(*xs.shape[:2], di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"]["scale"], cfg.rms_eps)
+    return jnp.einsum("bsi,id->bsd", y, lp["out_proj"]), h_fin
+
+
+def _block_step(cfg: ModelConfig, lp: Params, x: jax.Array, conv_state,
+                h) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, d) one token. Returns (out, new_conv_state, new_h)."""
+    di, P, NH, N, _ = _dims(cfg)
+    hn = L.rms_norm(x, lp["ln1"]["scale"], cfg.rms_eps)
+    proj = jnp.einsum("bd,de->be", hn, lp["in_proj"])
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _conv_step(xbc, conv_state, lp["conv_w"], lp["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["a_log"])
+    xh = xs.reshape(-1, NH, P).astype(jnp.float32)
+    y, h = _ssd_step(xh, dt, A, Bm.astype(jnp.float32),
+                     Cm.astype(jnp.float32), h)
+    y = y + xh * lp["d_skip"][None, :, None]
+    y = y.reshape(-1, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"]["scale"], cfg.rms_eps)
+    return jnp.einsum("bi,id->bd", y, lp["out_proj"]), conv_state, h
+
+
+# ---------------------------------------------------------------------------
+# model-level API
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16, abstract: bool = False) -> Dict[str, Any]:
+    di, P, NH, N, conv_dim = _dims(cfg)
+    Lr = cfg.num_layers
+    W = cfg.ssm.conv_width
+    mk = (jax.ShapeDtypeStruct if abstract else
+          lambda s, d: jnp.zeros(s, d))
+    return {
+        "conv": mk((Lr, batch, W - 1, conv_dim), dtype),
+        "state": mk((Lr, batch, NH, P, N), jnp.float32),
+        "length": mk((batch,), jnp.int32),
+    }
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, x: jax.Array,
+                   *, remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    di, P, NH, N, _ = _dims(cfg)
+    B = x.shape[0]
+    h0 = jnp.zeros((B, NH, P, N), jnp.float32)
+
+    body = partial(_block_full, cfg)
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_body(x, lp):
+        y, _ = body(lp, x, h0)
+        return x + y, None
+
+    x, _ = jax.lax.scan(scan_body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+               *, remat: bool = True):
+    from repro.models.dense import lm_loss
+    x = params["embed"]["embed"][batch["tokens"]]
+    hidden, _ = forward_hidden(cfg, params, x, remat=remat)
+    loss = lm_loss(cfg, params, hidden, batch["targets"], batch["mask"])
+    return loss, {"ce_loss": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, cache,
+             store=None, frontend_embeds=None, start_pos: int = 0):
+    """Prefill: run full sequence, producing final states for decode.
+
+    ``store`` may be a shared warm-start state pytree {"state": (L,B,NH,P,N)}
+    (the SSM analogue of the shared corpus: cache['state'] initialised from a
+    precomputed shared-prefix state).
+    """
+    x = params["embed"]["embed"][tokens]
+    B, S, _ = x.shape
+    di, P, NH, N, conv_dim = _dims(cfg)
+    W = cfg.ssm.conv_width
+    h0_all = (store["state"] if store is not None else
+              jnp.zeros((cfg.num_layers, B, NH, P, N), jnp.float32))
+
+    def scan_body(x, xs):
+        lp, h0 = xs
+        y, h_fin = _block_full(cfg, lp, x, h0)
+        # conv tail: last W-1 post-projection inputs for decode continuity
+        hn = L.rms_norm(x, lp["ln1"]["scale"], cfg.rms_eps)
+        proj = jnp.einsum("bsd,de->bse", hn, lp["in_proj"])
+        _, xbc, _ = _split_proj(cfg, proj)
+        conv_tail = xbc[:, -(W - 1):, :]
+        return x + y, (conv_tail, h_fin)
+
+    x, (conv_new, state_new) = jax.lax.scan(
+        scan_body, x, (params["layers"], h0_all))
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"]["embed"],
+                        preferred_element_type=jnp.float32)
+    new_cache = {"conv": conv_new.astype(cache["conv"].dtype),
+                 "state": state_new,
+                 "length": jnp.full((B,), start_pos + S, jnp.int32)}
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array, cache,
+                store=None, positions=None, kernel=None):
+    x = params["embed"]["embed"][tokens]
+
+    def scan_body(x, xs):
+        lp, conv_s, h = xs
+        y, conv_s, h = _block_step(cfg, lp, x, conv_s, h)
+        return x + y, (conv_s, h)
+
+    x, (conv_new, state_new) = jax.lax.scan(
+        scan_body, x, (params["layers"], cache["conv"], cache["state"]))
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+    logits = jnp.einsum("bd,vd->bv", x, params["embed"]["embed"],
+                        preferred_element_type=jnp.float32)
+    new_cache = {"conv": conv_new, "state": state_new,
+                 "length": cache["length"] + 1}
+    return logits, new_cache
+
+
+def shared_state(cfg: ModelConfig, params: Params,
+                 corpus_tokens: jax.Array) -> Dict[str, jax.Array]:
+    """Precompute the shared-prefix warm-start state (MoSKA analogue)."""
+    B = corpus_tokens.shape[0]
+    di, P, NH, N, conv_dim = _dims(cfg)
+    cache = init_cache(cfg, B, corpus_tokens.shape[1])
+    _, cache = prefill(cfg, params, corpus_tokens, cache)
+    return {"state": cache["state"]}

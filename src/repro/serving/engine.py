@@ -1,0 +1,163 @@
+"""MoSKA serving engine: continuous batching over slot-based decode waves.
+
+The full request path of the paper's system:
+
+  register_corpus()  — precompute a domain corpus' KV once (prefill) and
+                       chunk it into a SharedKVStore ("experts"), persistent
+                       across requests — the Shared-KV node state.
+  submit()/run()     — scheduler admits requests into B slots; unique
+                       prefill writes per-slot caches (Unique-KV node
+                       state); each decode wave runs one jit'd step where
+                       every layer routes + batches shared attention across
+                       all concurrent slots (the GEMM) and LSE-merges with
+                       per-slot unique attention.
+
+Static shapes: (B slots, max_seq) so decode steps hit one compiled program.
+Slot raggedness is handled by per-slot lengths; inactive slots decode
+garbage into slot-local buffers that are reset on admission (masked out of
+results).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.scheduler import Request, Scheduler, SchedulerConfig
+from repro.core.shared_kv import SharedKVStore, build_store
+from repro.models.model import Model, build_model
+
+
+@dataclass
+class EngineConfig:
+    max_slots: int = 4
+    max_seq: int = 512
+    eos_id: int = -1           # -1: never stop early
+    greedy: bool = True
+    mem_budget_bytes: float = float("inf")
+    kernel: Optional[str] = None    # None|'pallas' for shared attention
+    cache_dtype: Any = jnp.bfloat16
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig):
+        self.cfg = cfg
+        self.ecfg = engine_cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.stores: Dict[str, SharedKVStore] = {}
+        self.scheduler = Scheduler(SchedulerConfig(
+            max_slots=engine_cfg.max_slots,
+            mem_budget_bytes=engine_cfg.mem_budget_bytes,
+            unique_bytes_per_token=cfg.kv_bytes_per_token,
+            max_seq=engine_cfg.max_seq))
+        self._decode = jax.jit(self._decode_impl, static_argnames=("use_store",))
+        self.metrics = {"decode_steps": 0, "prefills": 0,
+                        "tokens_generated": 0, "wall_s": 0.0}
+
+    # ------------------------------------------------------------------
+    def register_corpus(self, corpus_id: str, tokens: np.ndarray) -> int:
+        """Precompute + chunk a shared corpus' KV. Returns #chunks."""
+        C = self.cfg.moska.chunk_size
+        n = (len(tokens) // C) * C
+        if n == 0:
+            raise ValueError("corpus shorter than one chunk")
+        toks = jnp.asarray(tokens[:n], jnp.int32)[None]
+        cache = self.model.init_cache(1, n, self.ecfg.cache_dtype)
+        _, cache = self.model.prefill(self.params, toks, cache)
+        store = build_store(cache.k[:, 0], cache.v[:, 0], C)
+        self.stores[corpus_id] = store
+        return store.num_chunks
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               corpus_id: Optional[str] = None) -> int:
+        if corpus_id is not None and corpus_id not in self.stores:
+            raise KeyError(f"corpus {corpus_id!r} not registered")
+        return self.scheduler.submit(prompt, max_new_tokens, corpus_id)
+
+    # ------------------------------------------------------------------
+    def _decode_impl(self, params, tokens, cache, store, use_store: bool):
+        logits, cache = self.model.decode_step(
+            params, tokens, cache, store=store if use_store else None,
+            kernel=self.ecfg.kernel)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    def _active_store(self) -> Optional[SharedKVStore]:
+        cid = self.scheduler.resident_corpus
+        return self.stores.get(cid) if cid is not None else None
+
+    def run(self, max_waves: int = 10**9) -> List[Request]:
+        """Drive to completion (or max_waves); returns finished requests."""
+        B = self.ecfg.max_slots
+        S = self.ecfg.max_seq
+        t0 = time.perf_counter()
+        cache = self.model.init_cache(B, S, self.ecfg.cache_dtype)
+        slot_tokens = np.zeros((B,), np.int32)
+
+        waves = 0
+        while not self.scheduler.idle and waves < max_waves:
+            admitted = self.scheduler.schedule()
+            for req in admitted:
+                cache, first = self._prefill_slot(cache, req)
+                slot_tokens[req.slot] = first
+                self.scheduler.record_token(req, int(first),
+                                            self.ecfg.eos_id)
+                self.metrics["tokens_generated"] += 1
+            active = self.scheduler.active()
+            if not active:
+                waves += 1
+                continue
+            store = self._active_store()
+            use_store = store is not None and self.cfg.moska.enabled
+            nxt, cache = self._decode(self.params,
+                                      jnp.asarray(slot_tokens), cache,
+                                      store, use_store)
+            nxt = np.asarray(nxt)
+            for req in list(active):
+                tok = int(nxt[req.slot])
+                slot_tokens[req.slot] = tok
+                self.scheduler.record_token(req, tok, self.ecfg.eos_id)
+                self.metrics["tokens_generated"] += 1
+            self.metrics["decode_steps"] += 1
+            waves += 1
+        self.metrics["wall_s"] += time.perf_counter() - t0
+        return self.scheduler.finished
+
+    # ------------------------------------------------------------------
+    def _prefill_slot(self, cache, req: Request):
+        """Prefill one slot; single-request prefill merged into the batch
+        cache (per-slot write)."""
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        slot_cache = self.model.init_cache(1, self.ecfg.max_seq,
+                                           self.ecfg.cache_dtype)
+        store = self.stores.get(req.corpus_id)
+        start = store.total_tokens if store is not None else 0
+        logits, slot_cache = self.model.prefill(
+            self.params, toks, slot_cache, store=store, start_pos=start)
+        self.metrics["prefills"] += 1
+        first = int(np.argmax(np.asarray(logits)[0]))
+        cache = _merge_slot_cache(cache, slot_cache, req.slot)
+        return cache, first
+
+
+def _merge_slot_cache(cache, slot_cache, slot: int):
+    """Copy a 1-batch cache pytree into batch slot ``slot``."""
+    def merge(dst, src):
+        if dst.ndim == 1:          # (B,) lengths / offsets
+            return dst.at[slot].set(src[0])
+        # layer-stacked arrays: (L, B, ...) vs (L, 1, ...)
+        if dst.ndim >= 2 and src.shape[0] == dst.shape[0] and \
+                src.shape[1] == 1:
+            if src.shape[2] <= dst.shape[2]:
+                return dst.at[:, slot, :src.shape[2]].set(src[:, 0])
+        raise ValueError(f"unmergeable cache leaf {dst.shape} <- {src.shape}")
+
+    return jax.tree.map(merge, cache, slot_cache)

@@ -1,0 +1,5 @@
+from repro.sharding.specs import (  # noqa: F401
+    LogicalRules, current_rules, logical_sharding_constraint, lsc,
+    named_sharding_tree, param_pspecs, set_rules, spec, use_rules,
+    SERVE_RULES, TRAIN_RULES, LONGCTX_RULES,
+)

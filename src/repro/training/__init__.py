@@ -1,0 +1,4 @@
+from repro.training.optimizer import (  # noqa: F401
+    AdamWState, adamw_init, adamw_update, cosine_schedule,
+)
+from repro.training.train_loop import TrainLoopConfig, train  # noqa: F401

@@ -1,0 +1,84 @@
+"""Checkpointing: pytree <-> .npz with path-keyed flattening (no orbax).
+
+Saves params / optimizer state / step under a directory with atomic
+rename; restore reconstructs the exact pytree structure from a template.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":   # npz has no bf16: store as f32
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params, opt_state=None,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir)
+    np.savez(os.path.join(tmp, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(tmp, "opt.npz"), **_flatten(opt_state))
+    meta = {"step": int(step), **(extra or {})}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(path):
+        raise FileExistsError(path)
+    os.rename(tmp, path)
+    # refresh "latest" pointer
+    with open(os.path.join(ckpt_dir, "LATEST"), "w") as f:
+        f.write(os.path.basename(path))
+    return path
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    path = os.path.join(ckpt_dir, name)
+    return path if os.path.exists(path) else None
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = flat[key]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            import ml_dtypes  # noqa: F401 (registers bf16 casts)
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_checkpoint(path: str, params_template,
+                       opt_template=None) -> Tuple[int, Any, Any]:
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    pf = np.load(os.path.join(path, "params.npz"))
+    params = _unflatten(params_template, dict(pf))
+    opt = None
+    opt_path = os.path.join(path, "opt.npz")
+    if opt_template is not None and os.path.exists(opt_path):
+        of = np.load(opt_path)
+        opt = _unflatten(opt_template, dict(of))
+    return meta["step"], params, opt

@@ -1,0 +1,69 @@
+"""AdamW + cosine schedule, pytree-native (no optax dependency).
+
+Optimizer moments are fp32 regardless of param dtype (mixed-precision
+training discipline); the update is sharding-transparent — state inherits
+the param PartitionSpecs so FSDP shards moments too.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(f32, params), jax.tree.map(f32, params))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: float = 1.0) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+
+    # global-norm clip
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, m, n, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        n_new = b2 * n + (1 - b2) * g * g
+        mhat = m_new / (1 - b1 ** step.astype(jnp.float32))
+        nhat = n_new / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), \
+            m_new, n_new
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu)

@@ -1,0 +1,102 @@
+"""Training loop: jit'd step (loss -> grads -> AdamW), data pipeline,
+periodic checkpointing, metric log. Distribution comes from the caller:
+under a mesh + rules the same step function runs FSDP+TP (launch/train.py);
+without, it runs single-device (examples, smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import make_train_batches
+from repro.models.model import Model, build_model
+from repro.training import checkpoint as ckpt_lib
+from repro.training.optimizer import (adamw_init, adamw_update,
+                                      cosine_schedule)
+
+
+@dataclass
+class TrainLoopConfig:
+    num_steps: int = 100
+    batch_size: int = 8
+    seq_len: int = 256
+    lr: float = 3e-4
+    warmup: int = 10
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    log_every: int = 10
+    remat: bool = True
+    seed: int = 0
+
+
+def make_train_step(model: Model, loop_cfg: TrainLoopConfig
+                    ) -> Callable:
+    lr = cosine_schedule(loop_cfg.lr, loop_cfg.warmup, loop_cfg.num_steps)
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.train_loss(p, batch,
+                                             remat=loop_cfg.remat)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=lr,
+            weight_decay=loop_cfg.weight_decay,
+            grad_clip=loop_cfg.grad_clip)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return step
+
+
+def train(cfg: ModelConfig, loop_cfg: TrainLoopConfig,
+          batches: Optional[Iterator[Dict[str, Any]]] = None,
+          params=None) -> Dict[str, Any]:
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(loop_cfg.seed)
+    if params is None:
+        params = model.init(key)
+    opt_state = adamw_init(params)
+
+    start_step = 0
+    if loop_cfg.ckpt_dir:
+        latest = ckpt_lib.latest_checkpoint(loop_cfg.ckpt_dir)
+        if latest:
+            start_step, params, opt_state = ckpt_lib.restore_checkpoint(
+                latest, params, opt_state)
+
+    step_fn = jax.jit(make_train_step(model, loop_cfg), donate_argnums=(0, 1))
+
+    if batches is None:
+        batches = make_train_batches(cfg, loop_cfg.batch_size,
+                                     loop_cfg.seq_len, seed=loop_cfg.seed)
+    history: List[Dict[str, float]] = []
+    t0 = time.perf_counter()
+    for step_idx in range(start_step, loop_cfg.num_steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (loop_cfg.log_every and step_idx % loop_cfg.log_every == 0) or \
+                step_idx == loop_cfg.num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step_idx
+            m["elapsed_s"] = time.perf_counter() - t0
+            history.append(m)
+            print(f"step {step_idx:5d} loss {m['loss']:.4f} "
+                  f"ce {m.get('ce_loss', 0.0):.4f} "
+                  f"({m['elapsed_s']:.1f}s)", flush=True)
+        if (loop_cfg.ckpt_dir and loop_cfg.ckpt_every
+                and (step_idx + 1) % loop_cfg.ckpt_every == 0):
+            ckpt_lib.save_checkpoint(loop_cfg.ckpt_dir, step_idx + 1,
+                                     params, opt_state)
+    return {"params": params, "opt_state": opt_state, "history": history}

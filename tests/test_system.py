@@ -1,0 +1,220 @@
+"""System behaviour tests: serving engine end-to-end, scheduler policy,
+training loop convergence, checkpoint round-trip, data pipeline,
+analytical-model fidelity (the paper's own claims), disaggregated
+(shard_map) vs pjit-path equivalence."""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import analytical as A
+from repro.core.scheduler import Scheduler, SchedulerConfig, wave_stats
+from repro.data.pipeline import (CorpusSpec, SyntheticLMDataset,
+                                 make_train_batches, synthesize_corpus)
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import adamw_init, adamw_update, cosine_schedule
+from repro.training.train_loop import TrainLoopConfig, train
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def test_engine_end_to_end_with_shared_corpus():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    eng = ServingEngine(cfg, params, EngineConfig(max_slots=3, max_seq=64))
+    corpus = synthesize_corpus(CorpusSpec("laws", 256, cfg.vocab_size))
+    n = eng.register_corpus("laws", corpus)
+    assert n == 256 // cfg.moska.chunk_size
+    for i in range(5):
+        eng.submit([1 + i] * 8, max_new_tokens=4, corpus_id="laws")
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.generated) == 4 for r in done)
+    assert eng.metrics["tokens_generated"] == 20
+    # continuous batching actually batched: fewer decode steps than
+    # sequential (5 reqs x 4 tokens = 20 sequential; slots=3 => ~8)
+    assert eng.metrics["decode_steps"] < 20
+
+
+def test_engine_greedy_determinism():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    outs = []
+    for _ in range(2):
+        eng = ServingEngine(cfg, params,
+                            EngineConfig(max_slots=2, max_seq=48))
+        eng.submit([5, 6, 7, 8], max_new_tokens=6)
+        outs.append(tuple(eng.run()[0].generated))
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_slots_and_memory_budget():
+    cfg = SchedulerConfig(max_slots=4, mem_budget_bytes=3 * 100 * 64,
+                          unique_bytes_per_token=64, max_seq=100)
+    s = Scheduler(cfg)
+    for i in range(6):
+        s.submit([1], 4, corpus_id="c0")
+    admitted = s.schedule()
+    # budget only fits 3 of 4 slots
+    assert len(admitted) == 3
+    for r in admitted:
+        for _ in range(4):
+            s.record_token(r, 0)
+    assert all(r.done for r in admitted)
+    nxt = s.schedule()
+    assert len(nxt) == 3
+
+
+def test_scheduler_corpus_affinity():
+    s = Scheduler(SchedulerConfig(max_slots=2))
+    s.submit([1], 1, corpus_id="a")
+    s.submit([1], 1, corpus_id="b")
+    s.submit([1], 1, corpus_id="a")
+    admitted = s.schedule()
+    # resident corpus 'a' preferred: both slots filled with 'a' requests
+    assert [r.corpus_id for r in admitted] == ["a", "a"]
+    stats = wave_stats(admitted)
+    assert stats["max_corpus_batch"] == 2
+
+
+# ---------------------------------------------------------------------------
+# training substrate
+# ---------------------------------------------------------------------------
+
+def test_train_loss_decreases():
+    cfg = dataclasses.replace(get_config("qwen1.5-0.5b").reduced(),
+                              num_layers=2)
+    loop = TrainLoopConfig(num_steps=30, batch_size=4, seq_len=64,
+                           lr=1e-3, log_every=29)
+    out = train(cfg, loop)
+    hist = out["history"]
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.2, hist
+
+
+def test_adamw_moves_params_and_clips():
+    params = {"w": jnp.ones((4, 4))}
+    state = adamw_init(params)
+    grads = {"w": jnp.full((4, 4), 100.0)}  # should be clipped
+    lr = cosine_schedule(1e-2, 1, 100)
+    new, state2 = adamw_update(grads, state, params, lr=lr)
+    assert not np.allclose(new["w"], params["w"])
+    assert int(state2.step) == 1
+    assert np.isfinite(np.asarray(new["w"])).all()
+
+
+def test_checkpoint_roundtrip():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    opt = adamw_init(params)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_checkpoint(d, 7, params, opt)
+        path = ckpt.latest_checkpoint(d)
+        step, p2, o2 = ckpt.restore_checkpoint(path, params, opt)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(opt), jax.tree.leaves(o2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_pipeline_deterministic_and_family_aware():
+    cfg = get_config("internvl2-76b").reduced()
+    b1 = next(make_train_batches(cfg, 2, 32, seed=3))
+    b2 = next(make_train_batches(cfg, 2, 32, seed=3))
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert "frontend_embeds" in b1
+    assert b1["tokens"].shape[1] + b1["frontend_embeds"].shape[1] == 32
+    ds = SyntheticLMDataset(100, 16, seed=0)
+    rows = next(ds.batches(4))
+    assert rows["tokens"].max() < 100
+
+
+# ---------------------------------------------------------------------------
+# analytical model = the paper's §IV claims
+# ---------------------------------------------------------------------------
+
+def test_fig1b_bandwidth_scaling():
+    """Sharing fixes capacity, not bandwidth (Fig. 1b)."""
+    out = A.bandwidth_scaling_fig1b([1, 8, 64])
+    cap_ns = out["capacity_no_share"]
+    assert cap_ns[2] / cap_ns[0] == 64        # capacity scales w/o sharing
+    assert out["capacity_shared"][0] == out["capacity_shared"][2]
+    bw = out["bandwidth_shared_gemv"]
+    assert bw[2] / bw[0] == 64                # GEMV bandwidth still scales
+    gemm = out["bandwidth_shared_gemm"]
+    assert gemm[0] == gemm[2]                 # MoSKA GEMM: flat
+
+
+def test_fig4_method_ordering():
+    """MoSKA >= ChunkAttention >> SGLang ~ FlashAttention at 16M."""
+    res = A.sweep_shared_context()
+    at16 = {k: v[-1] for k, v in res.items()}
+    assert at16["MoSKA"].throughput > at16["ChunkAttention"].throughput
+    assert at16["ChunkAttention"].throughput > 10 * at16["SGLang"].throughput
+    assert at16["SGLang"].throughput == pytest.approx(
+        at16["FlashAttention"].throughput, rel=0.3)
+    # reuse methods hold far larger batches (Fig. 4 batch capability)
+    assert at16["MoSKA"].max_batch > 50 * at16["FlashAttention"].max_batch
+
+
+def test_fig5_node_utilization():
+    """Shared node: MFU saturates >80% with batch; memory flat.
+    Unique node: memory scales linearly; MFU stays tiny (Fig. 5)."""
+    pts = A.utilization_vs_batch(A.MOSKA, [1, 16, 64, 256])
+    assert pts[-1].shared_node_mfu >= 0.8
+    assert pts[0].shared_node_mfu < 0.1
+    assert pts[0].shared_node_mem == pts[-1].shared_node_mem  # loaded once
+    assert pts[-1].unique_node_mem > 10 * pts[0].unique_node_mem
+    assert pts[-1].unique_node_mfu < 0.1      # memory-bound GEMV pool
+
+
+def test_headline_gain_exceeds_100x():
+    gains = A.headline_gain()
+    assert gains["FlashAttention"] > 100.0
+    assert gains["LongHeads"] > 100.0
+
+
+# ---------------------------------------------------------------------------
+# disaggregated shard_map path == pjit path (1-device degenerate mesh)
+# ---------------------------------------------------------------------------
+
+def test_disagg_shard_map_matches_batched():
+    from repro.core import build_store, route, shared_attention_batched
+    from repro.core.disagg import disaggregated_shared_attention
+    from repro.configs.base import MoSKAConfig
+    mesh = jax.make_mesh((1,), ("data",))
+    E, C, KH, D, H, B = 4, 8, 2, 16, 4, 3
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, E * C, KH, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, E * C, KH, D))
+    from repro.core import build_store as _bs
+    store = _bs(k, v, C)
+    q = jax.random.normal(jax.random.fold_in(KEY, 3), (B, H, D))
+    cfg = MoSKAConfig(top_k_chunks=2)
+    with mesh:
+        o1, l1 = disaggregated_shared_attention(
+            q, store.k[0], store.v[0], store.emb[0], cfg, mesh)
+    r = route(q, store.emb[0], 2)
+    part = shared_attention_batched(q[:, None], store.k[0], store.v[0], r,
+                                    capacity_factor=cfg.query_capacity_factor)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(part.out[:, 0]),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(part.lse[:, 0]),
+                               rtol=3e-5, atol=3e-5)
