@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.core import build_store, route
 from repro.kvcache import init_kv_cache
@@ -54,19 +55,30 @@ def run(emit):
     p = jax.nn.softmax(s, axis=-1)
     mass = p.reshape(B, KH, H // KH, E, C).sum(-1).mean((1, 2))  # (B, E)
 
+    # record per-k quality into the observability registry, then report
+    # from its snapshot — same metric names a serving deployment would see
+    reg = obs.get_registry()
     rng = np.random.default_rng(0)
     for k in (1, 2, 4, 8):
-        r = route(q, store.emb[0], k)
+        with obs.span("bench.route", registry=reg, top_k=k):
+            r = route(q, store.emb[0], k)
+            jax.block_until_ready(r.chunk_ids)
         routed = np.asarray(jax.vmap(
             lambda m, ids: m[ids].sum())(mass, r.chunk_ids))
         oracle = np.sort(np.asarray(mass), axis=1)[:, -k:].sum(1)
         rand_ids = rng.integers(0, E, (B, k))
         rand = np.take_along_axis(np.asarray(mass), rand_ids, 1).sum(1)
-        emit(f"router/top{k}_of_{E}/mass_captured", 0.0,
-             f"{routed.mean():.3f}")
-        emit(f"router/top{k}_of_{E}/oracle_mass", 0.0,
-             f"{oracle.mean():.3f}")
-        emit(f"router/top{k}_of_{E}/random_mass", 0.0,
-             f"{rand.mean():.3f}")
-        emit(f"router/top{k}_of_{E}/recall_vs_oracle", 0.0,
-             f"{(routed / np.maximum(oracle, 1e-9)).mean():.3f}")
+        base = f"router/top{k}_of_{E}"
+        reg.set_gauge(f"{base}/mass_captured", float(routed.mean()))
+        reg.set_gauge(f"{base}/oracle_mass", float(oracle.mean()))
+        reg.set_gauge(f"{base}/random_mass", float(rand.mean()))
+        reg.set_gauge(f"{base}/recall_vs_oracle",
+                      float((routed / np.maximum(oracle, 1e-9)).mean()))
+    snap = reg.snapshot()
+    for name, m in snap.items():
+        if name.startswith("router/"):
+            emit(name, 0.0, f"{m['value']:.3f}")
+    lat = reg.get("span/bench.route/duration_s")
+    if lat is not None and lat.count:
+        emit(f"router/route_call_mean_us_B{B}", lat.mean * 1e6,
+             f"n={lat.count}")

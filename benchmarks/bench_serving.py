@@ -2,19 +2,40 @@
 same engine with the shared store disabled (per-request monolithic
 context). The measured counterpart of Fig. 4's mechanism — KV reuse +
 batched shared attention vs per-request recompute — at toy scale.
+
+Numbers come from the engine's observability registry (``repro.obs``), not
+ad-hoc timers, so this bench and the serving engine report the same
+quantities: decode latency from ``engine/decode_step_latency_s``, token
+counts from ``engine/tokens_generated``, corpus registration from the
+``engine.register_corpus`` trace span. Each engine runs against its own
+registry so the two configurations don't mix.
 """
 from __future__ import annotations
-
-import dataclasses
-import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.data.pipeline import CorpusSpec, synthesize_corpus
 from repro.models.model import build_model
 from repro.serving.engine import EngineConfig, ServingEngine
+
+
+def _run_engine(cfg, params, ecfg, submits):
+    """Run one engine on a fresh registry; returns the registry."""
+    reg = obs.MetricsRegistry()
+    prev = obs.set_registry(reg)
+    try:
+        eng = ServingEngine(cfg, params, ecfg)
+        for corpus_id, corpus in submits.get("corpora", []):
+            eng.register_corpus(corpus_id, corpus)
+        for prompt, new, cid in submits["requests"]:
+            eng.submit(prompt, max_new_tokens=new, corpus_id=cid)
+        eng.run()
+    finally:
+        obs.set_registry(prev)
+    return reg
 
 
 def run(emit):
@@ -27,31 +48,38 @@ def run(emit):
                for _ in range(6)]
 
     # MoSKA: corpus KV precomputed once, requests route into it
-    eng = ServingEngine(cfg, params, EngineConfig(max_slots=3, max_seq=64))
-    t0 = time.perf_counter()
-    eng.register_corpus("d0", corpus)
-    t_reg = time.perf_counter() - t0
-    for p in prompts:
-        eng.submit(p, max_new_tokens=6, corpus_id="d0")
-    t0 = time.perf_counter()
-    eng.run()
-    t_moska = time.perf_counter() - t0
+    reg = _run_engine(cfg, params, EngineConfig(max_slots=3, max_seq=64), {
+        "corpora": [("d0", corpus)],
+        "requests": [(p, 6, "d0") for p in prompts],
+    })
+    reg_spans = [s for s in reg.spans if s.name == "engine.register_corpus"]
+    t_reg = sum(s.duration_s for s in reg_spans)
+    toks = reg.counter("engine/tokens_generated").value
+    t_moska = reg.gauge("engine/last_run_wall_s").value
+    steps = int(reg.counter("engine/decode_steps").value)
     emit("serving/moska/register_corpus_us", t_reg * 1e6,
          f"{len(corpus)}tok_once")
     emit("serving/moska/decode_us_per_token",
-         t_moska * 1e6 / max(eng.metrics["tokens_generated"], 1),
-         f"steps={eng.metrics['decode_steps']}")
+         t_moska * 1e6 / max(toks, 1), f"steps={steps}")
+    lat = reg.get("engine/decode_step_latency_s")
+    if lat is not None and lat.count:
+        emit("serving/moska/decode_step_mean_us", lat.mean * 1e6,
+             f"p50<={lat.quantile(0.5) * 1e6:.0f}us n={lat.count}")
+    util = reg.get("moska/dispatch_capacity_utilization")
+    if util is not None and util.count:
+        emit("serving/moska/dispatch_capacity_utilization", 0.0,
+             f"{util.mean:.3f}")
 
     # baseline: no shared store; every request prefills corpus+prompt
-    eng2 = ServingEngine(cfg, params,
-                         EngineConfig(max_slots=3, max_seq=320))
-    t0 = time.perf_counter()
-    for p in prompts:
-        eng2.submit(corpus.tolist() + p, max_new_tokens=6)
-    eng2.run()
-    t_base = time.perf_counter() - t0
+    reg2 = _run_engine(cfg, params,
+                       EngineConfig(max_slots=3, max_seq=320), {
+                           "requests": [(corpus.tolist() + p, 6, None)
+                                        for p in prompts],
+                       })
+    toks2 = reg2.counter("engine/tokens_generated").value
+    t_base = reg2.gauge("engine/last_run_wall_s").value
+    prefills = int(reg2.counter("engine/prefills").value)
     emit("serving/baseline_recompute/total_us_per_token",
-         t_base * 1e6 / max(eng2.metrics["tokens_generated"], 1),
-         f"prefills={eng2.metrics['prefills']}")
+         t_base * 1e6 / max(toks2, 1), f"prefills={prefills}")
     emit("serving/moska_speedup_incl_amortized_register", 0.0,
          f"{t_base / (t_moska + t_reg / len(prompts)):.2f}x")

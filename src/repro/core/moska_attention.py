@@ -14,10 +14,23 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import MoSKAConfig
 from repro.core import router as router_lib
 from repro.core import shared_attention as sa
 from repro.models import layers as L
+
+
+def _record_merge(lse_u: jax.Array, lse_s: jax.Array, phase: str) -> None:
+    """Mixture diagnostics: how much attention mass the routed shared path
+    contributes vs the request's unique cache (per-head win fraction).
+    jit-safe; no-op unless the engine enabled jit metrics."""
+    if not obs.metrics.JIT_METRICS:
+        return
+    obs.jit_inc(f"moska/{phase}/calls", 1)
+    obs.jit_observe(f"moska/{phase}/shared_win_frac",
+                    jnp.mean((lse_s > lse_u).astype(jnp.float32)),
+                    edges=obs.FRACTION_EDGES)
 
 
 class MoskaLayerContext(NamedTuple):
@@ -53,6 +66,7 @@ def moska_decode_attention(
         capacity_factor=cfg.query_capacity_factor, kernel=kernel)
     o_s = part.out[:, 0]                 # (B, H, D)
     lse_s = part.lse[:, 0]               # (B, H)
+    _record_merge(lse_u, lse_s, "decode")
     out, _ = L.merge_partial_attention([o_u, o_s], [lse_u, lse_s])
     return out
 
@@ -85,5 +99,6 @@ def moska_prefill_attention(
         capacity_factor=cfg.query_capacity_factor, kernel=kernel)
     o_s = part.out.reshape(B, S, H, D)
     lse_s = part.lse.reshape(B, S, H)
+    _record_merge(lse_u, lse_s, "prefill")
     out, _ = L.merge_partial_attention([o_u, o_s], [lse_u, lse_s])
     return out

@@ -10,6 +10,17 @@ Chunk-level batching (queries grouped per shared chunk) happens *inside*
 the attention (core/shared_attention.py); the scheduler's job is request
 lifecycle + corpus affinity: requests over the same shared corpus are
 steered into the same wave so the batched GEMM sees maximal N.
+
+Affinity is bounded: a queued request skipped ``affinity_max_skips`` times
+in favor of resident-corpus traffic is admitted unconditionally (and its
+corpus becomes resident), so no corpus starves under a sustained stream on
+another corpus.
+
+Every admission/eviction decision is recorded in the process-global
+metrics registry (``repro.obs``) under ``scheduler/*``: admission and
+release counters, slot-occupancy and memory-headroom gauges, the
+corpus-affinity hit/miss/preemption counters behind the batching-density
+story, and a wave batch-density histogram.
 """
 from __future__ import annotations
 
@@ -18,6 +29,8 @@ import dataclasses
 import itertools
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Sequence
+
+from repro import obs
 
 
 @dataclass
@@ -31,6 +44,7 @@ class Request:
     generated: List[int] = field(default_factory=list)
     slot: int = -1
     done: bool = False
+    skips: int = 0                       # affinity passes while queue head
 
     @property
     def remaining(self) -> int:
@@ -44,6 +58,8 @@ class SchedulerConfig:
     unique_bytes_per_token: int = 0      # cfg.kv_bytes_per_token
     max_seq: int = 2048
     corpus_affinity: bool = True
+    # starvation bound: force the queue head after this many affinity skips
+    affinity_max_skips: int = 64
 
 
 class Scheduler:
@@ -84,6 +100,7 @@ class Scheduler:
             if s is not None or not self.queue:
                 continue
             if not self.admissible():
+                obs.get_registry().inc("scheduler/admission_deferred_mem")
                 break
             req = self._pick_next()
             if req is None:
@@ -91,21 +108,50 @@ class Scheduler:
             req.slot = i
             self.slots[i] = req
             admitted.append(req)
+        self._record_wave(len(admitted))
         return admitted
 
     def _pick_next(self) -> Optional[Request]:
         if not self.queue:
             return None
+        reg = obs.get_registry()
         if not self.cfg.corpus_affinity or self.resident_corpus is None:
             req = self.queue.popleft()
             self.resident_corpus = req.corpus_id
             return req
+        head = self.queue[0]
+        # starvation bound: a head skipped too often wins over affinity
+        if head.skips >= self.cfg.affinity_max_skips:
+            reg.inc("scheduler/affinity_preemptions")
+            self.queue.popleft()
+            self.resident_corpus = head.corpus_id
+            return head
         # prefer requests on the resident corpus: keeps the batched GEMM hot
         for idx, r in enumerate(self.queue):
             if r.corpus_id == self.resident_corpus:
+                if idx:
+                    head.skips += 1
                 del self.queue[idx]
+                reg.inc("scheduler/affinity_hits")
                 return r
+        reg.inc("scheduler/affinity_misses")
         return self.queue.popleft()
+
+    def _record_wave(self, admitted: int) -> None:
+        reg = obs.get_registry()
+        if admitted:
+            reg.inc("scheduler/admitted", admitted)
+        n_active = sum(1 for s in self.slots if s is not None)
+        occupancy = n_active / max(self.cfg.max_slots, 1)
+        reg.set_gauge("scheduler/slot_occupancy", occupancy)
+        reg.set_gauge("scheduler/queue_depth", len(self.queue))
+        reg.observe("scheduler/wave_batch_density", occupancy,
+                    obs.FRACTION_EDGES)
+        budget = self.cfg.mem_budget_bytes
+        # -1 marks an unbounded budget (inf is not JSON-portable)
+        reg.set_gauge("scheduler/mem_headroom_bytes",
+                      budget - self._used_bytes()
+                      if budget != float("inf") else -1.0)
 
     # ------------------------------------------------------------------
     def active(self) -> List[Request]:
@@ -118,6 +164,9 @@ class Scheduler:
             self.finished.append(req)
             self.slots[req.slot] = None
             req.slot = -1
+            reg = obs.get_registry()
+            reg.inc("scheduler/slots_released")
+            reg.inc("scheduler/completed")
 
     @property
     def idle(self) -> bool:

@@ -27,11 +27,27 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import router as router_lib
 from repro.core.shared_kv import SharedKVStore
 from repro.sharding import lsc
 
 NEG_INF = -1e30
+
+
+def _record_dispatch(qmask: jax.Array, keep: jax.Array) -> None:
+    """Dispatch-density metrics (paper's compute-bound claim hinges on
+    these): fraction of (chunk, capacity) slots filled, and how many
+    (group, k) routes fell off the capacity cliff. Runs inside the jit'd
+    decode step, so it goes through the trace-time-gated obs callbacks —
+    a no-op unless the serving engine enabled jit metrics."""
+    if not obs.metrics.JIT_METRICS:
+        return
+    obs.jit_observe("moska/dispatch_capacity_utilization",
+                    jnp.mean(qmask.astype(jnp.float32)),
+                    edges=obs.FRACTION_EDGES)
+    obs.jit_inc("moska/dispatched_queries", jnp.sum(keep))
+    obs.jit_inc("moska/dropped_queries", jnp.sum(~keep))
 
 
 class SharedPartial(NamedTuple):
@@ -83,6 +99,7 @@ def shared_attention_batched(
     capacity: Optional[int] = None,
     capacity_factor: float = 2.0,
     kernel: Optional[str] = None,  # None|'jnp'|'pallas'
+    block_c: Optional[int] = None,  # kv-tile size for the pallas kernel
 ) -> SharedPartial:
     """Batched Shared KV Attention over routed chunks."""
     G, Q, H, D = q.shape
@@ -101,14 +118,17 @@ def shared_attention_batched(
     qd = lsc(qd, "chunks", None, None, "heads", None)
     qmask = jnp.zeros((E, capacity), bool).at[flat, drop_pos].set(
         keep, mode="drop")
+    _record_dispatch(qmask, keep)
 
     if kernel == "pallas":
         from repro.kernels import ops as kops
         # kernel takes (E, cap, H, D): fold the per-group query dim into cap
         qd_k = qd.reshape(E, capacity * Q, H, D)
         qm_k = jnp.repeat(qmask, Q, axis=1)
+        kern_kwargs = {} if block_c is None else {"block_c": block_c}
         od, lsed = kops.shared_chunk_attention(qd_k, layer_store_k,
-                                               layer_store_v, qm_k)
+                                               layer_store_v, qm_k,
+                                               **kern_kwargs)
         od = od.reshape(E, capacity, Q, H, D)
         lsed = lsed.reshape(E, capacity, Q, H)
     else:

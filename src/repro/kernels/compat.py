@@ -1,0 +1,14 @@
+"""Version compatibility shims for Pallas TPU APIs.
+
+jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+the kernels target the new name and fall back here on older releases.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # pragma: no cover - very old jax
+    raise ImportError("pallas TPU compiler params API not found; "
+                      "need jax >= 0.4.30")

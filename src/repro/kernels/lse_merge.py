@@ -16,12 +16,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
 def _kernel(o_ref, l_ref, out_ref, lse_ref):
     o = o_ref[...].astype(jnp.float32)           # (P, blk, H, D)
     lse = l_ref[...].astype(jnp.float32)         # (P, blk, H)
+    # clamp genuine -inf sentinels to the finite NEG_INF: keeps the
+    # all-partials-empty row NaN-free (exp(-inf - -inf) is NaN)
+    lse = jnp.maximum(lse, NEG_INF)
     m = jnp.max(lse, axis=0)                     # (blk, H)
     w = jnp.exp(lse - m[None])                   # (P, blk, H)
     denom = jnp.sum(w, axis=0)
@@ -55,7 +60,7 @@ def lse_merge(outs: jax.Array, lses: jax.Array, *, block_n: int = 256,
             jax.ShapeDtypeStruct((N, H, D), outs.dtype),
             jax.ShapeDtypeStruct((N, H), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
         name="moska_lse_merge",

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(q_ref, e_ref, s_ref, *, scale: float):
     q = q_ref[...].astype(jnp.float32)           # (blk_g, F)
@@ -54,7 +56,7 @@ def router_scores(q: jax.Array, emb: jax.Array, *, block_g: int = 128,
         ],
         out_specs=pl.BlockSpec((block_g, block_e), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((G, E), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
         name="moska_router_scores",

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -119,7 +121,7 @@ def shared_chunk_attention(qd: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((cap * G, 1), jnp.float32),
             pltpu.VMEM((cap * G, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="moska_shared_chunk_attn",
@@ -221,7 +223,7 @@ def shared_chunk_attention_q8(qd: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((cap * G, 1), jnp.float32),
             pltpu.VMEM((cap * G, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="moska_shared_chunk_attn_q8",

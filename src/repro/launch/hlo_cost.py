@@ -134,17 +134,30 @@ class HloModule:
     def _shape_table(self, comp: str) -> Dict[str, str]:
         return {op.name: op.out_shape for op in self.computations[comp]}
 
+    @staticmethod
+    def _arg_names(op: _Op) -> List[str]:
+        """Operand names of ``op``, in order. Handles both operand syntaxes
+        XLA emits: bare names ``dot(%a, %b)`` and inline-typed
+        ``dot(f32[64,256]{1,0} %a, ...)`` (the typed form puts commas
+        inside shapes, so naive comma-splitting mis-parses)."""
+        args = re.search(r"\b" + re.escape(op.kind) + r"\(([^)]*)\)", op.rhs)
+        if not args:
+            return []
+        body = args.group(1)
+        names = re.findall(r"%([\w.\-]+)", body)
+        if names:
+            return names
+        # untyped, un-%-prefixed operand lists: plain comma split is safe
+        return [a.strip() for a in body.split(",") if a.strip()]
+
     def _dot_flops(self, op: _Op, shapes: Dict[str, str]) -> float:
         # flops = 2 * numel(out) * prod(contracting dims of lhs)
         out_shapes = _parse_shapes(op.out_shape)
         if not out_shapes:
             return 0.0
         out_n = _numel(out_shapes[0][1])
-        args = re.search(r"\b" + re.escape(op.kind) + r"\(([^)]*)\)", op.rhs)
-        lhs_name = None
-        if args:
-            first = args.group(1).split(",")[0].strip().lstrip("%")
-            lhs_name = first
+        names = self._arg_names(op)
+        lhs_name = names[0] if names else None
         cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rhs)
         k = 1
         if lhs_name and cdims and lhs_name in shapes:
@@ -157,14 +170,8 @@ class HloModule:
         return 2.0 * out_n * k
 
     def _op_args_bytes(self, op: _Op, shapes: Dict[str, str]) -> float:
-        args = re.search(r"\b" + re.escape(op.kind) + r"\(([^)]*)\)", op.rhs)
-        total = 0.0
-        if args:
-            for a in args.group(1).split(","):
-                a = a.strip().lstrip("%")
-                if a in shapes:
-                    total += _shape_bytes(shapes[a])
-        return total
+        return sum(_shape_bytes(shapes[a]) for a in self._arg_names(op)
+                   if a in shapes)
 
     # ------------------------------------------------------------------
     def cost(self, comp: Optional[str] = None) -> Cost:
@@ -211,24 +218,16 @@ class HloModule:
             elif kind == "dynamic-update-slice":
                 # in-place write: traffic = update operand read+written,
                 # NOT the whole aliased output buffer
-                args = re.search(r"dynamic-update-slice\(([^)]*)\)", op.rhs)
-                upd = 0.0
-                if args:
-                    parts = [a.strip().lstrip("%")
-                             for a in args.group(1).split(",")]
-                    if len(parts) >= 2 and parts[1] in shapes:
-                        upd = _shape_bytes(shapes[parts[1]])
+                parts = self._arg_names(op)
+                upd = (_shape_bytes(shapes[parts[1]])
+                       if len(parts) >= 2 and parts[1] in shapes else 0.0)
                 total += Cost(traffic=2.0 * upd)
             elif kind == "scatter":
                 # like dus: in-place on the aliased operand — count the
                 # updates (arg 2) read+written, not the whole buffer
-                args = re.search(r"\bscatter\(([^)]*)\)", op.rhs)
-                upd = 0.0
-                if args:
-                    parts = [a.strip().lstrip("%")
-                             for a in args.group(1).split(",")]
-                    if len(parts) >= 3 and parts[2] in shapes:
-                        upd = _shape_bytes(shapes[parts[2]])
+                parts = self._arg_names(op)
+                upd = (_shape_bytes(shapes[parts[2]])
+                       if len(parts) >= 3 and parts[2] in shapes else 0.0)
                 total += Cost(traffic=2.0 * upd)
             elif kind in ("gather", "dynamic-slice", "reduce",
                           "concatenate", "pad", "slice",

@@ -1,23 +1,30 @@
 """Serving launcher: MoSKA engine over a shared corpus.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --reduced --requests 8 --corpus-tokens 512
+    PYTHONPATH=src python -m repro.launch.serve --metrics-out metrics.json
 
 Registers a synthetic domain corpus (precomputed shared KV chunks), submits
-a stream of requests against it, and reports scheduler/throughput metrics.
-On TPU hardware the same engine runs under make_production_mesh with
-SERVE_RULES (unique KV batch-sharded = Unique pool; chunks data-sharded =
-Shared pool).
+a stream of requests against it, and reports scheduler/throughput metrics
+from the process-global observability registry (``repro.obs``). The default
+invocation is the fast dry-run path: a reduced config small enough for CPU
+smoke runs; pass ``--full`` for the unreduced architecture. On TPU hardware
+the same engine runs under make_production_mesh with SERVE_RULES (unique KV
+batch-sharded = Unique pool; chunks data-sharded = Shared pool).
+
+``--metrics-out PATH`` dumps the full registry at exit — scheduler
+occupancy/affinity, dispatch capacity-utilization, decode-latency
+histograms, and trace spans — as JSON (or line protocol for ``.lp``/
+``.txt`` paths). See README "Metrics & tracing" for the naming and bucket
+conventions.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.core.scheduler import wave_stats
 from repro.data.pipeline import CorpusSpec, synthesize_corpus
@@ -27,10 +34,14 @@ from repro.serving.engine import EngineConfig, ServingEngine
 from repro.sharding import SERVE_RULES, set_rules
 
 
-def main() -> None:
+def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
-    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="run the unreduced architecture (default: reduced "
+                         "dry-run path)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="deprecated: reduced is now the default")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
@@ -39,23 +50,27 @@ def main() -> None:
     ap.add_argument("--corpus-tokens", type=int, default=512)
     ap.add_argument("--kernel", default=None, choices=[None, "pallas"])
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the metrics registry (JSON; .lp/.txt for "
+                         "line protocol) at exit")
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
-    if args.reduced:
+    if not args.full:
         cfg = cfg.reduced()
 
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    eng = ServingEngine(cfg, params, EngineConfig(
-        max_slots=args.slots, max_seq=args.max_seq, kernel=args.kernel))
+    with obs.span("serve.init", arch=args.arch):
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(args.seed))
+        eng = ServingEngine(cfg, params, EngineConfig(
+            max_slots=args.slots, max_seq=args.max_seq, kernel=args.kernel))
 
     corpus = synthesize_corpus(CorpusSpec(
         "domain-0", args.corpus_tokens, cfg.vocab_size, seed=args.seed))
-    t0 = time.perf_counter()
     nchunks = eng.register_corpus("domain-0", corpus)
+    reg_span = eng.registry.spans[-1]
     print(f"registered corpus domain-0: {nchunks} chunks "
-          f"({time.perf_counter()-t0:.1f}s)")
+          f"({reg_span.duration_s:.1f}s)")
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -63,17 +78,26 @@ def main() -> None:
                                 args.prompt_len).tolist(),
                    max_new_tokens=args.new_tokens, corpus_id="domain-0")
 
-    t0 = time.perf_counter()
     done = eng.run()
-    wall = time.perf_counter() - t0
-    toks = eng.metrics["tokens_generated"]
-    print(json.dumps({
+
+    reg = eng.registry
+    decode_lat = reg.histogram("engine/decode_step_latency_s",
+                               obs.LATENCY_EDGES_S)
+    summary = {
         "finished": len(done),
-        "tokens": toks,
-        "decode_steps": eng.metrics["decode_steps"],
-        "tokens_per_s": toks / wall if wall else 0.0,
+        "tokens": int(reg.counter("engine/tokens_generated").value),
+        "decode_steps": int(reg.counter("engine/decode_steps").value),
+        "tokens_per_s": reg.gauge("engine/last_run_tokens_per_s").value,
+        "decode_step_p50_s": decode_lat.quantile(0.5),
+        "slot_occupancy": reg.gauge("scheduler/slot_occupancy").value,
+        "affinity_hits": reg.counter("scheduler/affinity_hits").value,
         "wave": wave_stats(done),
-    }, indent=1))
+    }
+    print(json.dumps(summary, indent=1))
+    if args.metrics_out:
+        obs.dump(args.metrics_out, reg)
+        print(f"metrics registry -> {args.metrics_out}")
+    return summary
 
 
 if __name__ == "__main__":

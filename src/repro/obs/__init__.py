@@ -1,0 +1,21 @@
+"""Serving-path observability: metrics registry, trace spans, exporters.
+
+  metrics   process-global MetricsRegistry (counters/gauges/histograms)
+            + jit-safe recording via jax.debug.callback
+  trace     span() context manager with per-thread parent nesting
+  export    JSON (round-trippable) and line-protocol dumps
+
+Plain Python records directly (``get_registry().inc(...)``); jit-traced
+code uses ``jit_inc``/``jit_gauge``/``jit_observe``, which are no-ops
+unless ``enable_jit_metrics(True)`` was called before tracing.
+"""
+from repro.obs.export import (  # noqa: F401
+    dump, from_dict, load, to_dict, to_json, to_lines,
+)
+from repro.obs.metrics import (  # noqa: F401
+    COUNT_EDGES, FRACTION_EDGES, LATENCY_EDGES_S,
+    Counter, Gauge, Histogram, MetricsRegistry,
+    enable_jit_metrics, get_registry, jit_gauge, jit_inc, jit_observe,
+    reset_registry, set_registry,
+)
+from repro.obs.trace import Span, current_span, span  # noqa: F401

@@ -1,0 +1,283 @@
+"""Process-global metrics: counters, gauges, histograms.
+
+The serving path is a mix of plain Python (scheduler, engine loop) and
+jit-compiled JAX (the decode step, including the routed shared-attention
+dispatch). Plain Python code records directly on the registry; traced code
+must NOT — a direct record inside a jit'd function fires once at trace time
+and never again. For traced values use ``jit_inc``/``jit_observe``/
+``jit_gauge``, which lower to ``jax.debug.callback`` so the record happens
+on every *execution*. Those helpers are gated by ``enable_jit_metrics``
+(checked at trace time) so the default compiled programs carry no host
+callbacks — dry-runs, HLO cost analysis, and multi-device lowering see the
+exact same HLO as before this module existed.
+
+This module deliberately has no jax import at module level: the scheduler
+and exporters stay importable in dependency-free contexts.
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+Number = Union[int, float]
+
+# ---------------------------------------------------------------------------
+# bucket-edge conventions (documented in README "Metrics & tracing")
+# ---------------------------------------------------------------------------
+
+#: wall-clock latencies in seconds: log-ish spaced 100us .. 10s
+LATENCY_EDGES_S: Tuple[float, ...] = (
+    1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
+
+#: ratios in [0, 1] (occupancy, capacity utilization, batch density)
+FRACTION_EDGES: Tuple[float, ...] = tuple(i / 10.0 for i in range(1, 11))
+
+#: small integer counts (wave sizes, chunks, drops): powers of two
+COUNT_EDGES: Tuple[float, ...] = (
+    1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+
+DEFAULT_EDGES = LATENCY_EDGES_S
+
+
+class Counter:
+    """Monotonic cumulative counter."""
+
+    kind = "counter"
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def inc(self, v: Number = 1) -> None:
+        if v < 0:
+            raise ValueError(f"counter {self.name}: negative increment {v}")
+        self.value += float(v)
+
+    def snapshot(self) -> dict:
+        return {"kind": self.kind, "value": self.value}
+
+
+class Gauge:
+    """Last-write-wins instantaneous value (also tracks min/max seen)."""
+
+    kind = "gauge"
+    __slots__ = ("name", "value", "min", "max", "updates")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+        self.updates = 0
+
+    def set(self, v: Number) -> None:
+        v = float(v)
+        self.value = v
+        self.min = v if self.min is None else min(self.min, v)
+        self.max = v if self.max is None else max(self.max, v)
+        self.updates += 1
+
+    def snapshot(self) -> dict:
+        return {"kind": self.kind, "value": self.value, "min": self.min,
+                "max": self.max, "updates": self.updates}
+
+
+class Histogram:
+    """Fixed-bucket histogram.
+
+    ``edges`` are upper bounds: bucket ``i`` counts observations
+    ``v <= edges[i]`` (and ``> edges[i-1]``); one implicit overflow bucket
+    counts ``v > edges[-1]``. Non-cumulative counts; ``counts`` has
+    ``len(edges) + 1`` entries.
+    """
+
+    kind = "histogram"
+    __slots__ = ("name", "edges", "counts", "count", "sum", "min", "max")
+
+    def __init__(self, name: str, edges: Sequence[Number] = DEFAULT_EDGES):
+        if not edges or list(edges) != sorted(set(float(e) for e in edges)):
+            raise ValueError(
+                f"histogram {name}: edges must be strictly increasing "
+                f"and non-empty, got {edges!r}")
+        self.name = name
+        self.edges: Tuple[float, ...] = tuple(float(e) for e in edges)
+        self.counts: List[int] = [0] * (len(self.edges) + 1)
+        self.count = 0
+        self.sum = 0.0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+
+    def observe(self, v: Number) -> None:
+        v = float(v)
+        self.counts[bisect.bisect_left(self.edges, v)] += 1
+        self.count += 1
+        self.sum += v
+        self.min = v if self.min is None else min(self.min, v)
+        self.max = v if self.max is None else max(self.max, v)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Approximate quantile: upper edge of the bucket holding rank q."""
+        if not self.count:
+            return 0.0
+        rank = q * self.count
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= rank and c:
+                return (self.edges[i] if i < len(self.edges)
+                        else (self.max if self.max is not None else 0.0))
+        return self.max if self.max is not None else 0.0
+
+    def snapshot(self) -> dict:
+        return {"kind": self.kind, "edges": list(self.edges),
+                "counts": list(self.counts), "count": self.count,
+                "sum": self.sum, "min": self.min, "max": self.max,
+                "mean": self.mean}
+
+
+Metric = Union[Counter, Gauge, Histogram]
+
+
+class MetricsRegistry:
+    """Named metrics + completed trace spans. Thread-safe get-or-create."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._metrics: Dict[str, Metric] = {}
+        self.spans: List[object] = []     # trace.Span, appended by trace.py
+
+    # -- get-or-create ---------------------------------------------------
+    def _get(self, name: str, cls, *args) -> Metric:
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, *args)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise TypeError(f"metric {name!r} is a {m.kind}, "
+                                f"not a {cls.kind}")
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str,
+                  edges: Sequence[Number] = DEFAULT_EDGES) -> Histogram:
+        return self._get(name, Histogram, edges)
+
+    # -- convenience -----------------------------------------------------
+    def inc(self, name: str, v: Number = 1) -> None:
+        self.counter(name).inc(v)
+
+    def set_gauge(self, name: str, v: Number) -> None:
+        self.gauge(name).set(v)
+
+    def observe(self, name: str, v: Number,
+                edges: Sequence[Number] = DEFAULT_EDGES) -> None:
+        self.histogram(name, edges).observe(v)
+
+    # -- introspection ---------------------------------------------------
+    def get(self, name: str) -> Optional[Metric]:
+        with self._lock:
+            return self._metrics.get(name)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._metrics)
+
+    def snapshot(self) -> Dict[str, dict]:
+        with self._lock:
+            return {n: m.snapshot() for n, m in sorted(self._metrics.items())}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+            self.spans.clear()
+
+
+# ---------------------------------------------------------------------------
+# process-global registry
+# ---------------------------------------------------------------------------
+
+_global_lock = threading.Lock()
+_global_registry = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    return _global_registry
+
+
+def set_registry(reg: MetricsRegistry) -> MetricsRegistry:
+    """Swap the process-global registry (tests / isolated benches).
+    Returns the previous registry."""
+    global _global_registry
+    with _global_lock:
+        prev, _global_registry = _global_registry, reg
+        return prev
+
+
+def reset_registry() -> None:
+    _global_registry.reset()
+
+
+# ---------------------------------------------------------------------------
+# jit-safe recording (trace-time gated host callbacks)
+# ---------------------------------------------------------------------------
+
+#: checked at TRACE time — flip before building the jit'd serving step.
+JIT_METRICS = False
+
+
+def enable_jit_metrics(on: bool = True) -> None:
+    """Enable metric callbacks inside jit-compiled code. Must be set before
+    the function is traced; already-compiled programs are unaffected."""
+    global JIT_METRICS
+    JIT_METRICS = on
+
+
+def _cb_inc(name, v):
+    get_registry().inc(name, float(v))
+
+
+def _cb_gauge(name, v):
+    get_registry().set_gauge(name, float(v))
+
+
+def _cb_observe(name, edges, v):
+    get_registry().observe(name, float(v), edges)
+
+
+def _callback(fn, value) -> None:
+    import jax
+    jax.debug.callback(fn, value)
+
+
+def jit_inc(name: str, value) -> None:
+    """Counter increment from (possibly) traced code; no-op unless
+    ``enable_jit_metrics(True)`` was called before tracing."""
+    if JIT_METRICS:
+        import functools
+        _callback(functools.partial(_cb_inc, name), value)
+
+
+def jit_gauge(name: str, value) -> None:
+    if JIT_METRICS:
+        import functools
+        _callback(functools.partial(_cb_gauge, name), value)
+
+
+def jit_observe(name: str, value,
+                edges: Sequence[Number] = DEFAULT_EDGES) -> None:
+    if JIT_METRICS:
+        import functools
+        _callback(functools.partial(_cb_observe, name, tuple(edges)), value)

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.scheduler import Request, Scheduler, SchedulerConfig
 from repro.core.shared_kv import SharedKVStore, build_store
@@ -43,6 +44,9 @@ class EngineConfig:
     mem_budget_bytes: float = float("inf")
     kernel: Optional[str] = None    # None|'pallas' for shared attention
     cache_dtype: Any = jnp.bfloat16
+    # record dispatch-density metrics from inside the jit'd decode step
+    # (trace-time switch; adds host callbacks to the compiled program)
+    jit_metrics: bool = True
 
 
 class ServingEngine:
@@ -57,9 +61,15 @@ class ServingEngine:
             mem_budget_bytes=engine_cfg.mem_budget_bytes,
             unique_bytes_per_token=cfg.kv_bytes_per_token,
             max_seq=engine_cfg.max_seq))
+        if engine_cfg.jit_metrics:
+            obs.enable_jit_metrics(True)
         self._decode = jax.jit(self._decode_impl, static_argnames=("use_store",))
         self.metrics = {"decode_steps": 0, "prefills": 0,
                         "tokens_generated": 0, "wall_s": 0.0}
+
+    @property
+    def registry(self) -> obs.MetricsRegistry:
+        return obs.get_registry()
 
     # ------------------------------------------------------------------
     def register_corpus(self, corpus_id: str, tokens: np.ndarray) -> int:
@@ -68,11 +78,18 @@ class ServingEngine:
         n = (len(tokens) // C) * C
         if n == 0:
             raise ValueError("corpus shorter than one chunk")
-        toks = jnp.asarray(tokens[:n], jnp.int32)[None]
-        cache = self.model.init_cache(1, n, self.ecfg.cache_dtype)
-        _, cache = self.model.prefill(self.params, toks, cache)
-        store = build_store(cache.k[:, 0], cache.v[:, 0], C)
+        with obs.span("engine.register_corpus", corpus_id=corpus_id,
+                      tokens=n):
+            toks = jnp.asarray(tokens[:n], jnp.int32)[None]
+            cache = self.model.init_cache(1, n, self.ecfg.cache_dtype)
+            _, cache = self.model.prefill(self.params, toks, cache)
+            store = build_store(jax.block_until_ready(cache.k)[:, 0],
+                                cache.v[:, 0], C)
         self.stores[corpus_id] = store
+        reg = self.registry
+        reg.inc("engine/corpora_registered")
+        reg.inc("engine/corpus_tokens_prefilled", n)
+        reg.set_gauge(f"engine/corpus/{corpus_id}/chunks", store.num_chunks)
         return store.num_chunks
 
     # ------------------------------------------------------------------
@@ -98,37 +115,62 @@ class ServingEngine:
         """Drive to completion (or max_waves); returns finished requests."""
         B = self.ecfg.max_slots
         S = self.ecfg.max_seq
+        reg = self.registry
         t0 = time.perf_counter()
+        tok0 = self.metrics["tokens_generated"]
         cache = self.model.init_cache(B, S, self.ecfg.cache_dtype)
         slot_tokens = np.zeros((B,), np.int32)
 
         waves = 0
-        while not self.scheduler.idle and waves < max_waves:
-            admitted = self.scheduler.schedule()
-            for req in admitted:
-                cache, first = self._prefill_slot(cache, req)
-                slot_tokens[req.slot] = first
-                self.scheduler.record_token(req, int(first),
-                                            self.ecfg.eos_id)
-                self.metrics["tokens_generated"] += 1
-            active = self.scheduler.active()
-            if not active:
+        with obs.span("engine.run"):
+            while not self.scheduler.idle and waves < max_waves:
+                admitted = self.scheduler.schedule()
+                for req in admitted:
+                    tp = time.perf_counter()
+                    cache, first = self._prefill_slot(cache, req)
+                    reg.observe("engine/prefill_latency_s",
+                                time.perf_counter() - tp,
+                                obs.LATENCY_EDGES_S)
+                    slot_tokens[req.slot] = first
+                    self.scheduler.record_token(req, int(first),
+                                                self.ecfg.eos_id)
+                    self.metrics["tokens_generated"] += 1
+                    reg.inc("engine/tokens_generated")
+                active = self.scheduler.active()
+                if not active:
+                    waves += 1
+                    continue
+                store = self._active_store()
+                use_store = store is not None and self.cfg.moska.enabled
+                # batch density: fraction of the static wave the decode
+                # step spends on live requests (the N of the GEMM batching)
+                reg.observe("engine/wave_batch_density", len(active) / B,
+                            obs.FRACTION_EDGES)
+                reg.observe("engine/wave_active_slots", len(active),
+                            obs.COUNT_EDGES)
+                td = time.perf_counter()
+                nxt, cache = self._decode(self.params,
+                                          jnp.asarray(slot_tokens), cache,
+                                          store, use_store)
+                nxt = np.asarray(nxt)   # device sync: latency includes it
+                reg.observe("engine/decode_step_latency_s",
+                            time.perf_counter() - td, obs.LATENCY_EDGES_S)
+                for req in list(active):
+                    tok = int(nxt[req.slot])
+                    slot_tokens[req.slot] = tok
+                    self.scheduler.record_token(req, tok, self.ecfg.eos_id)
+                    self.metrics["tokens_generated"] += 1
+                    reg.inc("engine/tokens_generated")
+                    reg.inc("engine/decoded_tokens")
+                self.metrics["decode_steps"] += 1
+                reg.inc("engine/decode_steps")
                 waves += 1
-                continue
-            store = self._active_store()
-            use_store = store is not None and self.cfg.moska.enabled
-            nxt, cache = self._decode(self.params,
-                                      jnp.asarray(slot_tokens), cache,
-                                      store, use_store)
-            nxt = np.asarray(nxt)
-            for req in list(active):
-                tok = int(nxt[req.slot])
-                slot_tokens[req.slot] = tok
-                self.scheduler.record_token(req, tok, self.ecfg.eos_id)
-                self.metrics["tokens_generated"] += 1
-            self.metrics["decode_steps"] += 1
-            waves += 1
-        self.metrics["wall_s"] += time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+        self.metrics["wall_s"] += wall
+        reg.set_gauge("engine/last_run_wall_s", wall)
+        reg.set_gauge("engine/last_run_tokens_per_s",
+                      (self.metrics["tokens_generated"] - tok0) / wall
+                      if wall > 0 else 0.0)
         return self.scheduler.finished
 
     # ------------------------------------------------------------------
@@ -143,6 +185,7 @@ class ServingEngine:
         logits, slot_cache = self.model.prefill(
             self.params, toks, slot_cache, store=store, start_pos=start)
         self.metrics["prefills"] += 1
+        self.registry.inc("engine/prefills")
         first = int(np.argmax(np.asarray(logits)[0]))
         cache = _merge_slot_cache(cache, slot_cache, req.slot)
         return cache, first

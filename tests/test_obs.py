@@ -1,0 +1,272 @@
+"""Unit tests for the observability layer (repro.obs) and the LSE-merge
+kernel edge cases it keeps honest.
+
+Covers: histogram bucketing (edges, overflow, quantiles), counter/gauge
+semantics, span nesting (parent/depth), exporter round-trip (JSON and line
+protocol), jit-safe recording through jax.debug.callback, and
+kernels/lse_merge.py on all-(-inf) LSE rows and merge associativity.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.kernels.lse_merge import NEG_INF, lse_merge
+
+
+@pytest.fixture()
+def fresh_registry():
+    """Isolated registry + restored jit-metrics flag per test."""
+    reg = obs.MetricsRegistry()
+    prev_reg = obs.set_registry(reg)
+    prev_flag = obs.metrics.JIT_METRICS
+    try:
+        yield reg
+    finally:
+        obs.set_registry(prev_reg)
+        obs.enable_jit_metrics(prev_flag)
+
+
+# ---------------------------------------------------------------------------
+# metrics primitives
+# ---------------------------------------------------------------------------
+
+def test_counter_and_gauge(fresh_registry):
+    reg = fresh_registry
+    reg.inc("c")
+    reg.inc("c", 2.5)
+    assert reg.counter("c").value == 3.5
+    with pytest.raises(ValueError):
+        reg.counter("c").inc(-1)
+    reg.set_gauge("g", 5)
+    reg.set_gauge("g", -2)
+    g = reg.gauge("g")
+    assert (g.value, g.min, g.max, g.updates) == (-2.0, -2.0, 5.0, 2)
+    with pytest.raises(TypeError):
+        reg.gauge("c")          # kind mismatch
+
+
+def test_histogram_bucketing(fresh_registry):
+    h = fresh_registry.histogram("h", edges=(1.0, 2.0, 5.0))
+    for v in (0.5, 1.0, 1.5, 2.0, 4.9, 5.0, 7.0, 100.0):
+        h.observe(v)
+    # v <= edge lands in that bucket; > last edge overflows
+    assert h.counts == [2, 2, 2, 2]
+    assert h.count == 8
+    assert h.sum == pytest.approx(121.9)
+    assert (h.min, h.max) == (0.5, 100.0)
+    assert h.mean == pytest.approx(121.9 / 8)
+    assert h.quantile(0.25) == 1.0
+    assert h.quantile(1.0) == 100.0     # overflow bucket reports max
+    with pytest.raises(ValueError):
+        fresh_registry.histogram("bad", edges=(2.0, 1.0))
+
+
+def test_histogram_snapshot_shape(fresh_registry):
+    h = fresh_registry.histogram("h", edges=obs.FRACTION_EDGES)
+    h.observe(0.35)
+    snap = h.snapshot()
+    assert len(snap["counts"]) == len(snap["edges"]) + 1
+    assert sum(snap["counts"]) == snap["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+def test_span_nesting(fresh_registry):
+    reg = fresh_registry
+    with obs.span("outer", registry=reg):
+        assert obs.current_span().name == "outer"
+        with obs.span("inner", registry=reg, wave=3):
+            assert obs.current_span().depth == 1
+    assert obs.current_span() is None
+    by_name = {s.name: s for s in reg.spans}
+    assert by_name["inner"].parent == "outer"
+    assert by_name["inner"].depth == 1
+    assert by_name["outer"].parent is None
+    assert by_name["inner"].attrs == {"wave": 3}
+    assert by_name["outer"].duration_s >= by_name["inner"].duration_s >= 0
+    # spans auto-feed latency histograms
+    assert reg.histogram("span/outer/duration_s").count == 1
+
+
+def test_span_records_on_exception(fresh_registry):
+    reg = fresh_registry
+    with pytest.raises(RuntimeError):
+        with obs.span("boom", registry=reg):
+            raise RuntimeError("x")
+    assert [s.name for s in reg.spans] == ["boom"]
+    assert obs.current_span() is None       # stack unwound
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def test_exporter_json_round_trip(fresh_registry, tmp_path):
+    reg = fresh_registry
+    reg.inc("scheduler/admitted", 4)
+    reg.set_gauge("scheduler/slot_occupancy", 0.75)
+    reg.observe("engine/decode_step_latency_s", 0.003)
+    with obs.span("engine.run", registry=reg):
+        pass
+    path = str(tmp_path / "m.json")
+    obs.dump(path, reg)
+    back = obs.load(path)
+    assert back.snapshot() == reg.snapshot()
+    assert [s.name for s in back.spans] == [s.name for s in reg.spans]
+    # and via the in-memory dict path too
+    assert obs.from_dict(obs.to_dict(reg)).snapshot() == reg.snapshot()
+
+
+def test_exporter_rejects_unknown_schema(fresh_registry):
+    with pytest.raises(ValueError):
+        obs.from_dict({"schema_version": 999, "metrics": {}})
+
+
+def test_line_protocol(fresh_registry, tmp_path):
+    reg = fresh_registry
+    reg.inc("tokens", 12)
+    reg.observe("lat", 0.2, edges=(0.1, 1.0))
+    lines = obs.to_lines(reg)
+    assert "tokens value=12.0" in lines
+    assert "lat,le=1.0 count=1" in lines
+    assert any(line.startswith("lat count=1 sum=0.2") for line in lines)
+    path = str(tmp_path / "m.lp")
+    obs.dump(path, reg)
+    assert open(path).read().strip() == "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# jit-safe recording
+# ---------------------------------------------------------------------------
+
+def test_jit_metrics_record_per_execution(fresh_registry):
+    reg = fresh_registry
+    obs.enable_jit_metrics(True)
+
+    @jax.jit
+    def f(x):
+        obs.jit_inc("jit/calls", 1)
+        obs.jit_observe("jit/mean", jnp.mean(x), edges=obs.FRACTION_EDGES)
+        return x + 1
+
+    for _ in range(3):
+        f(jnp.full((4,), 0.5)).block_until_ready()
+    # trace-time-only recording would show 1; per-execution shows 3
+    assert reg.counter("jit/calls").value == 3
+    assert reg.histogram("jit/mean", obs.FRACTION_EDGES).count == 3
+
+
+def test_jit_metrics_disabled_is_noop(fresh_registry):
+    reg = fresh_registry
+    obs.enable_jit_metrics(False)
+
+    @jax.jit
+    def f(x):
+        obs.jit_inc("jit/calls", 1)
+        return x + 1
+
+    f(jnp.zeros((2,))).block_until_ready()
+    assert reg.get("jit/calls") is None
+
+
+def test_dispatch_metrics_flow_from_shared_attention(fresh_registry):
+    """shared_attention_batched feeds the dispatch-density metrics the
+    serving engine exports."""
+    from repro.core.router import Routing
+    from repro.core.shared_attention import shared_attention_batched
+    reg = fresh_registry
+    obs.enable_jit_metrics(True)
+    G, K, E, C, H, KH, D = 4, 2, 4, 8, 8, 2, 16
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (E, C, KH, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (E, C, KH, D))
+    q = jax.random.normal(jax.random.fold_in(key, 3), (G, 1, H, D))
+    ids = jnp.tile(jnp.arange(K, dtype=jnp.int32)[None], (G, 1))
+    r = Routing(ids, jnp.zeros((G, K)), jnp.zeros((G, E)))
+    jax.block_until_ready(
+        shared_attention_batched(q, k, v, r, capacity=G * K))
+    util = reg.get("moska/dispatch_capacity_utilization")
+    assert util is not None and util.count == 1
+    assert reg.counter("moska/dispatched_queries").value == G * K
+    assert reg.counter("moska/dropped_queries").value == 0
+
+
+# ---------------------------------------------------------------------------
+# kernels/lse_merge.py edge cases
+# ---------------------------------------------------------------------------
+
+def _ref_merge(outs, lses):
+    m = np.max(lses, axis=0)
+    w = np.exp(lses - m[None])
+    denom = np.sum(w, axis=0)
+    out = np.sum(outs * w[..., None], axis=0) / np.maximum(
+        denom, 1e-37)[..., None]
+    return out, m + np.log(np.maximum(denom, 1e-37))
+
+
+def test_lse_merge_matches_reference():
+    key = jax.random.PRNGKey(1)
+    P, N, H, D = 3, 8, 4, 16
+    outs = jax.random.normal(jax.random.fold_in(key, 1), (P, N, H, D))
+    lses = jax.random.normal(jax.random.fold_in(key, 2), (P, N, H))
+    out, lse = lse_merge(outs, lses)
+    ref_o, ref_l = _ref_merge(np.asarray(outs), np.asarray(lses))
+    np.testing.assert_allclose(out, ref_o, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(lse, ref_l, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("sentinel", [NEG_INF, -np.inf])
+def test_lse_merge_all_empty_rows(sentinel):
+    """Rows where every partial is empty (-inf LSE): output must be
+    finite (zero) and the merged LSE must stay at the sentinel floor."""
+    P, N, H, D = 2, 4, 2, 8
+    outs = jnp.zeros((P, N, H, D))
+    lses = jnp.full((P, N, H), sentinel, jnp.float32)
+    out, lse = lse_merge(outs, lses)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    assert np.all(np.asarray(lse) <= NEG_INF / 2)
+    assert np.isfinite(np.asarray(lse)).all()
+
+
+def test_lse_merge_partial_empty_rows():
+    """Mixing one empty partial with finite ones must equal merging the
+    finite ones alone."""
+    key = jax.random.PRNGKey(2)
+    N, H, D = 6, 2, 8
+    o1 = jax.random.normal(jax.random.fold_in(key, 1), (N, H, D))
+    o2 = jax.random.normal(jax.random.fold_in(key, 2), (N, H, D))
+    l1 = jax.random.normal(jax.random.fold_in(key, 3), (N, H))
+    l2 = jax.random.normal(jax.random.fold_in(key, 4), (N, H))
+    empty_o = jnp.zeros((N, H, D))
+    empty_l = jnp.full((N, H), -jnp.inf)
+    out3, lse3 = lse_merge(jnp.stack([o1, o2, empty_o]),
+                           jnp.stack([l1, l2, empty_l]))
+    out2, lse2 = lse_merge(jnp.stack([o1, o2]), jnp.stack([l1, l2]))
+    np.testing.assert_allclose(out3, out2, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(lse3, lse2, rtol=3e-5, atol=3e-5)
+
+
+def test_lse_merge_associativity():
+    """merge(merge(a, b), c) == merge(a, b, c) to fp32 tolerance."""
+    key = jax.random.PRNGKey(3)
+    N, H, D = 5, 2, 8
+    parts = [(jax.random.normal(jax.random.fold_in(key, 10 + i),
+                                (N, H, D)),
+              5.0 * jax.random.normal(jax.random.fold_in(key, 20 + i),
+                                      (N, H)))
+             for i in range(3)]
+    o_all, l_all = lse_merge(jnp.stack([p[0] for p in parts]),
+                             jnp.stack([p[1] for p in parts]))
+    o_ab, l_ab = lse_merge(jnp.stack([parts[0][0], parts[1][0]]),
+                           jnp.stack([parts[0][1], parts[1][1]]))
+    o_fin, l_fin = lse_merge(jnp.stack([o_ab, parts[2][0]]),
+                             jnp.stack([l_ab, parts[2][1]]))
+    np.testing.assert_allclose(o_fin, o_all, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(l_fin, l_all, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,169 @@
+"""Scheduler property/invariant tests.
+
+Invariants under arbitrary submit/decode/finish interleavings:
+  * conservation — every submitted request is exactly one of queued,
+    active, or finished; no slot is leaked or double-booked across refills
+  * admission never exceeds the analytical memory budget
+  * corpus-affinity steering never starves a queued corpus indefinitely
+    (bounded by ``affinity_max_skips``)
+
+Randomized hypothesis versions run when hypothesis is installed
+(requirements-dev.txt); the deterministic fallback cases always run.
+"""
+import collections
+
+import pytest
+
+from repro import obs
+from repro.core.scheduler import Scheduler, SchedulerConfig
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed "
+    "(pip install -r requirements-dev.txt)")
+
+
+def _drive(sched: Scheduler, rng, n_requests, corpora, max_steps=10_000):
+    """Random submit/decode walk; checks invariants at every step.
+    Returns total schedule() calls until drain."""
+    submitted = 0
+    steps = 0
+    while (submitted < n_requests or not sched.idle) and steps < max_steps:
+        steps += 1
+        # random arrivals
+        while submitted < n_requests and rng.random() < 0.5:
+            cid = corpora[rng.integers(0, len(corpora))]
+            sched.submit([1, 2, 3], int(rng.integers(1, 4)), cid)
+            submitted += 1
+        sched.schedule()
+        _check_conservation(sched, submitted)
+        _check_budget(sched)
+        # one decode wave: every active request yields a token
+        for req in list(sched.active()):
+            sched.record_token(req, 7)
+        _check_conservation(sched, submitted)
+    assert sched.idle, "scheduler failed to drain"
+    assert len(sched.finished) == submitted
+    return steps
+
+
+def _check_conservation(sched: Scheduler, submitted: int):
+    active = sched.active()
+    # no slot double-booking; slot back-pointers consistent
+    slots = [r.slot for r in active]
+    assert len(set(slots)) == len(slots)
+    for i, s in enumerate(sched.slots):
+        if s is not None:
+            assert s.slot == i and not s.done
+    # partition: queued + active + finished == submitted
+    assert len(sched.queue) + len(active) + len(sched.finished) == submitted
+    # finished requests hold no slot (no leak across refills)
+    assert all(r.slot == -1 for r in sched.finished)
+
+
+def _check_budget(sched: Scheduler):
+    assert sched._used_bytes() <= sched.cfg.mem_budget_bytes
+
+
+# ---------------------------------------------------------------------------
+# deterministic cases (always run)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,max_slots,n_requests,n_corpora", [
+    (0, 1, 5, 1), (1, 4, 20, 2), (2, 3, 17, 3), (3, 8, 40, 1),
+])
+def test_no_slot_leak_random_walk(seed, max_slots, n_requests, n_corpora):
+    import numpy as np
+    sched = Scheduler(SchedulerConfig(max_slots=max_slots))
+    corpora = [f"c{i}" for i in range(n_corpora)]
+    _drive(sched, np.random.default_rng(seed), n_requests, corpora)
+
+
+@pytest.mark.parametrize("budget_slots", [1, 2, 3])
+def test_admission_respects_memory_budget(budget_slots):
+    """Budget for exactly N slots: never more than N admitted at once,
+    and used bytes never exceed the analytical budget."""
+    per_slot = 1000 * 64          # unique_bytes_per_token * max_seq
+    cfg = SchedulerConfig(max_slots=8, unique_bytes_per_token=1000,
+                          max_seq=64,
+                          mem_budget_bytes=budget_slots * per_slot)
+    sched = Scheduler(cfg)
+    for _ in range(6):
+        sched.submit([1], 2, "c0")
+    while not sched.idle:
+        sched.schedule()
+        assert len(sched.active()) <= budget_slots
+        _check_budget(sched)
+        for req in list(sched.active()):
+            sched.record_token(req, 7)
+    assert len(sched.finished) == 6
+
+
+def test_affinity_no_indefinite_starvation():
+    """A lone request on corpus B must get a slot despite a sustained
+    stream on resident corpus A — within the affinity_max_skips bound."""
+    max_skips = 4
+    sched = Scheduler(SchedulerConfig(max_slots=1, affinity_max_skips=max_skips))
+    sched.submit([1], 1, "A")
+    sched.schedule()                       # A becomes resident
+    for req in list(sched.active()):
+        sched.record_token(req, 7)
+    starved_uid = sched.submit([1], 1, "B")
+    waves = 0
+    served_b = False
+    # sustained stream of A-traffic: one new A request per wave
+    while waves < max_skips + 10 and not served_b:
+        sched.submit([1], 1, "A")
+        sched.schedule()
+        for req in list(sched.active()):
+            served_b |= req.uid == starved_uid
+            sched.record_token(req, 7)
+        waves += 1
+    assert served_b, f"corpus B starved for {waves} waves"
+    assert waves <= max_skips + 2
+    reg = obs.get_registry()
+    assert reg.counter("scheduler/affinity_preemptions").value >= 1
+
+
+def test_affinity_still_prefers_resident_corpus():
+    """Sanity: under the skip bound, affinity still batches the resident
+    corpus ahead of FIFO order."""
+    sched = Scheduler(SchedulerConfig(max_slots=2, affinity_max_skips=100))
+    sched.submit([1], 1, "A")
+    sched.submit([1], 1, "B")
+    sched.submit([1], 1, "A")
+    admitted = sched.schedule()
+    assert [r.corpus_id for r in admitted] == ["A", "A"]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property versions
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 8),
+           st.integers(0, 30), st.integers(1, 3))
+    @settings(max_examples=25, deadline=None)
+    def test_property_no_slot_leak(seed, max_slots, n_requests, n_corpora):
+        import numpy as np
+        sched = Scheduler(SchedulerConfig(max_slots=max_slots))
+        corpora = [f"c{i}" for i in range(n_corpora)]
+        _drive(sched, np.random.default_rng(seed), n_requests, corpora)
+
+    @needs_hypothesis
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+    @settings(max_examples=25, deadline=None)
+    def test_property_budget(seed, budget_slots):
+        import numpy as np
+        per_slot = 100 * 16
+        cfg = SchedulerConfig(max_slots=8, unique_bytes_per_token=100,
+                              max_seq=16,
+                              mem_budget_bytes=budget_slots * per_slot)
+        sched = Scheduler(cfg)
+        _drive(sched, np.random.default_rng(seed), 12, ["c0", "c1"])
