@@ -9,8 +9,21 @@ quantities: decode latency from ``engine/decode_step_latency_s``, token
 counts from ``engine/tokens_generated``, corpus registration from the
 ``engine.register_corpus`` trace span. Each engine runs against its own
 registry so the two configurations don't mix.
+
+Also benchmarks the zero-copy hot path (donated persistent cache vs
+copying decode steps, ``engine/decode_cache_bytes_copied``) and runs a
+prompt-length sweep asserting the bucketed prefill jit cache stays bounded
+(``engine/prefill_compile_count`` <= bucket count).
+
+    PYTHONPATH=src python -m benchmarks.bench_serving --json-out BENCH_serving.json
+
+writes the machine-readable result record (the perf-trajectory file
+checked in as BENCH_serving.json; CI re-runs it as a smoke gate).
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import numpy as np
@@ -19,7 +32,8 @@ from repro import obs
 from repro.configs import get_config
 from repro.data.pipeline import CorpusSpec, synthesize_corpus
 from repro.models.model import build_model
-from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.engine import (EngineConfig, ServingEngine,
+                                  resolve_prefill_buckets)
 
 
 def _run_engine(cfg, params, ecfg, submits):
@@ -46,8 +60,15 @@ def run(emit):
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, 8).tolist()
                for _ in range(6)]
+    record = {"config": "tinyllama-1.1b/reduced", "metrics": {}}
 
-    # MoSKA: corpus KV precomputed once, requests route into it
+    def rec(name, us, derived):
+        record["metrics"][name] = {"us_per_call": round(us, 2),
+                                   "derived": derived}
+        emit(name, us, derived)
+
+    # MoSKA: corpus KV precomputed once, requests route into it; decode
+    # waves mutate the donated persistent cache (zero-copy hot path)
     reg = _run_engine(cfg, params, EngineConfig(max_slots=3, max_seq=64), {
         "corpora": [("d0", corpus)],
         "requests": [(p, 6, "d0") for p in prompts],
@@ -57,18 +78,36 @@ def run(emit):
     toks = reg.counter("engine/tokens_generated").value
     t_moska = reg.gauge("engine/last_run_wall_s").value
     steps = int(reg.counter("engine/decode_steps").value)
-    emit("serving/moska/register_corpus_us", t_reg * 1e6,
-         f"{len(corpus)}tok_once")
-    emit("serving/moska/decode_us_per_token",
-         t_moska * 1e6 / max(toks, 1), f"steps={steps}")
+    rec("serving/moska/register_corpus_us", t_reg * 1e6,
+        f"{len(corpus)}tok_once")
+    rec("serving/moska/decode_us_per_token",
+        t_moska * 1e6 / max(toks, 1), f"steps={steps}")
     lat = reg.get("engine/decode_step_latency_s")
     if lat is not None and lat.count:
-        emit("serving/moska/decode_step_mean_us", lat.mean * 1e6,
-             f"p50<={lat.quantile(0.5) * 1e6:.0f}us n={lat.count}")
+        rec("serving/moska/decode_step_mean_us", lat.mean * 1e6,
+            f"p50<={lat.quantile(0.5) * 1e6:.0f}us n={lat.count}")
+        record["metrics"]["serving/moska/decode_step_p50_us"] = {
+            "us_per_call": round(lat.quantile(0.5) * 1e6, 2),
+            "derived": f"n={lat.count}"}
+    rec("serving/moska/decode_cache_bytes_copied", 0.0,
+        f"{int(reg.gauge('engine/decode_cache_bytes_copied').value)}B"
+        f"_of_{int(reg.gauge('engine/decode_cache_bytes').value)}B")
     util = reg.get("moska/dispatch_capacity_utilization")
     if util is not None and util.count:
-        emit("serving/moska/dispatch_capacity_utilization", 0.0,
-             f"{util.mean:.3f}")
+        rec("serving/moska/dispatch_capacity_utilization", 0.0,
+            f"{util.mean:.3f}")
+
+    # same workload with donation off: every decode step copies the cache
+    reg_nd = _run_engine(cfg, params,
+                         EngineConfig(max_slots=3, max_seq=64,
+                                      donate_cache=False), {
+                             "corpora": [("d0", corpus)],
+                             "requests": [(p, 6, "d0") for p in prompts],
+                         })
+    lat_nd = reg_nd.get("engine/decode_step_latency_s")
+    if lat is not None and lat.count and lat_nd is not None and lat_nd.count:
+        rec("serving/no_donation/decode_step_mean_us", lat_nd.mean * 1e6,
+            f"donated_mean={lat.mean * 1e6:.0f}us")
 
     # baseline: no shared store; every request prefills corpus+prompt
     reg2 = _run_engine(cfg, params,
@@ -79,7 +118,51 @@ def run(emit):
     toks2 = reg2.counter("engine/tokens_generated").value
     t_base = reg2.gauge("engine/last_run_wall_s").value
     prefills = int(reg2.counter("engine/prefills").value)
-    emit("serving/baseline_recompute/total_us_per_token",
-         t_base * 1e6 / max(toks2, 1), f"prefills={prefills}")
-    emit("serving/moska_speedup_incl_amortized_register", 0.0,
-         f"{t_base / (t_moska + t_reg / len(prompts)):.2f}x")
+    rec("serving/baseline_recompute/total_us_per_token",
+        t_base * 1e6 / max(toks2, 1), f"prefills={prefills}")
+    rec("serving/moska_speedup_incl_amortized_register", 0.0,
+        f"{t_base / (t_moska + t_reg / len(prompts)):.2f}x")
+
+    # prompt-length sweep: the bucketed prefill jit cache must stay bounded
+    # (one program per bucket, not per distinct prompt length)
+    sweep_lengths = [17, 18, 33, 34, 65, 66, 129, 130]
+    reg3 = _run_engine(cfg, params,
+                       EngineConfig(max_slots=2, max_seq=256), {
+                           "corpora": [("d0", corpus)],
+                           "requests": [([2] * n, 2, "d0")
+                                        for n in sweep_lengths],
+                       })
+    buckets = resolve_prefill_buckets("auto", 256)
+    compiles = int(reg3.gauge("engine/prefill_compile_count").value)
+    rec("serving/prefill_sweep/compile_count", 0.0,
+        f"{compiles}_programs_for_{len(sweep_lengths)}_lengths_"
+        f"{len(buckets)}_buckets")
+    record["prefill_sweep"] = {
+        "prompt_lengths": sweep_lengths,
+        "buckets": list(buckets),
+        "bucket_count": len(buckets),
+        "compile_count": compiles,
+    }
+    return record
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write the machine-readable result record "
+                         "(BENCH_serving.json format)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    record = run(lambda n, us, d: print(f"{n},{us:.2f},{d}", flush=True))
+    record["backend"] = jax.default_backend()
+    record["jax_version"] = jax.__version__
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(record, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"bench record -> {args.json_out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -43,5 +43,12 @@ print(f"finished {len(done)} requests in {wall:.1f}s — "
       f"{eng.metrics['decode_steps']} decode waves "
       f"(batched {eng.metrics['tokens_generated'] / eng.metrics['decode_steps']:.1f} tok/wave)")
 print("wave stats:", wave_stats(done))
+reg = eng.registry
+print(f"zero-copy hot path: decode cache bytes copied/wave = "
+      f"{int(reg.gauge('engine/decode_cache_bytes_copied').value)} "
+      f"(cache {int(reg.gauge('engine/decode_cache_bytes').value)}B), "
+      f"{int(reg.gauge('engine/prefill_compile_count').value)} prefill "
+      f"program(s) for {eng.metrics['prefills']} prefills "
+      f"(buckets {list(eng.prefill_buckets or ())})")
 for r in done[:3]:
     print(f"  req {r.uid} [{r.corpus_id}]: {r.generated}")

@@ -11,10 +11,17 @@ the attention (core/shared_attention.py); the scheduler's job is request
 lifecycle + corpus affinity: requests over the same shared corpus are
 steered into the same wave so the batched GEMM sees maximal N.
 
-Affinity is bounded: a queued request skipped ``affinity_max_skips`` times
-in favor of resident-corpus traffic is admitted unconditionally (and its
-corpus becomes resident), so no corpus starves under a sustained stream on
-another corpus.
+A wave is **never mixed**: the decode step attends one shared store for
+all slots, so every active request must be on the resident corpus
+(``corpus_id=None`` counts as its own corpus — no store). Requests on a
+different corpus are deferred until the resident wave drains, at which
+point residency flips to the next admissible request's corpus.
+
+Affinity is bounded: once a queue head has been skipped
+``affinity_max_skips`` times in favor of resident-corpus traffic, the
+scheduler stops admitting resident traffic, lets the wave drain, and then
+flips residency to the head — so no corpus starves under a sustained
+stream on another corpus.
 
 Every admission/eviction decision is recorded in the process-global
 metrics registry (``repro.obs``) under ``scheduler/*``: admission and
@@ -75,6 +82,16 @@ class Scheduler:
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
                corpus_id: Optional[str] = None) -> int:
+        if max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens} "
+                "(the prefill always produces one token)")
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new_tokens > self.cfg.max_seq:
+            raise ValueError(
+                f"prompt ({len(prompt)} tokens) + max_new_tokens "
+                f"({max_new_tokens}) exceeds max_seq={self.cfg.max_seq}")
         uid = next(self._uid)
         self.queue.append(Request(uid, list(prompt), max_new_tokens,
                                   corpus_id))
@@ -112,21 +129,53 @@ class Scheduler:
         return admitted
 
     def _pick_next(self) -> Optional[Request]:
+        """Pick the next request to admit, or None to defer.
+
+        Invariant: the returned request's corpus always equals
+        ``resident_corpus`` after the call — a wave never mixes corpora
+        (the decode step attends exactly one shared store for all slots).
+        """
         if not self.queue:
             return None
         reg = obs.get_registry()
-        if not self.cfg.corpus_affinity or self.resident_corpus is None:
-            req = self.queue.popleft()
-            self.resident_corpus = req.corpus_id
-            return req
-        head = self.queue[0]
-        # starvation bound: a head skipped too often wins over affinity
-        if head.skips >= self.cfg.affinity_max_skips:
-            reg.inc("scheduler/affinity_preemptions")
+        if not self.cfg.corpus_affinity:
+            # affinity off still never mixes: admit only when the wave is
+            # empty or the head matches the resident corpus
+            head = self.queue[0]
+            if self._wave_live() and head.corpus_id != self.resident_corpus:
+                reg.inc("scheduler/affinity_deferrals")
+                return None
             self.queue.popleft()
             self.resident_corpus = head.corpus_id
             return head
-        # prefer requests on the resident corpus: keeps the batched GEMM hot
+        head = self.queue[0]
+        starved = head.skips >= self.cfg.affinity_max_skips
+        if not self._wave_live():
+            # empty wave: residency may flip freely
+            if starved:
+                if head.corpus_id != self.resident_corpus:
+                    reg.inc("scheduler/affinity_preemptions")
+                self.queue.popleft()
+                self.resident_corpus = head.corpus_id
+                return head
+            for idx, r in enumerate(self.queue):
+                if r.corpus_id == self.resident_corpus:
+                    if idx:
+                        head.skips += 1
+                    del self.queue[idx]
+                    reg.inc("scheduler/affinity_hits")
+                    return r
+            # resident corpus drained from the queue: flip to the head
+            req = self.queue.popleft()
+            self.resident_corpus = req.corpus_id
+            reg.inc("scheduler/affinity_flips")
+            return req
+        # live wave on the resident corpus
+        if starved and head.corpus_id != self.resident_corpus:
+            # stop feeding the wave so it drains; the head preempts once
+            # the last resident-corpus slot releases (bounded starvation)
+            reg.inc("scheduler/affinity_drains")
+            return None
         for idx, r in enumerate(self.queue):
             if r.corpus_id == self.resident_corpus:
                 if idx:
@@ -134,8 +183,13 @@ class Scheduler:
                 del self.queue[idx]
                 reg.inc("scheduler/affinity_hits")
                 return r
+        # nothing on the resident corpus: defer rather than mix the wave
+        head.skips += 1
         reg.inc("scheduler/affinity_misses")
-        return self.queue.popleft()
+        return None
+
+    def _wave_live(self) -> bool:
+        return any(s is not None for s in self.slots)
 
     def _record_wave(self, admitted: int) -> None:
         reg = obs.get_registry()

@@ -1,3 +1,4 @@
 from repro.kvcache.cache import (  # noqa: F401
-    KVCache, abstract_kv_cache, append_token, init_kv_cache, write_prefix,
+    KVCache, abstract_kv_cache, append_token, init_kv_cache, read_slot,
+    write_prefix, write_slot_prefix,
 )

@@ -46,6 +46,52 @@ def abstract_kv_cache(num_layers: int, batch: int, max_seq: int,
                    sds((batch,), jnp.int32), sds((batch,), jnp.int32))
 
 
+def write_slot_prefix(cache: KVCache, slot_cache: KVCache, slot,
+                      true_len=None) -> KVCache:
+    """Write a prefilled 1-batch cache into batch slot ``slot`` in place.
+
+    The donation-friendly per-slot admission write: jit the caller with
+    ``donate_argnums`` on ``cache`` and XLA updates the batch cache buffer
+    without copying the other ``B - 1`` slots (vs. the full-cache merge of
+    a ``tree_map``-style copy).
+
+    ``slot_cache`` holds a (L, 1, S_new, KH, D) prefix with S_new <=
+    cache.max_seq (S_new may be a padded prefill bucket). ``true_len``
+    (traced scalar ok), when given, is the real prompt length: positions
+    >= true_len inside the prefix are zeroed and the slot length is set to
+    ``true_len``, so a reused slot never leaks stale or pad KV beyond the
+    new prompt. The slot tail beyond S_new is always zeroed.
+    """
+    S, S_new = cache.max_seq, slot_cache.max_seq
+    if S_new > S:
+        raise ValueError(f"slot prefix length {S_new} > cache max_seq {S}")
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def wr(dst, src):
+        src = src.astype(dst.dtype)
+        if true_len is not None:
+            valid = jnp.arange(S_new) < true_len
+            src = jnp.where(valid[None, None, :, None, None], src,
+                            jnp.zeros((), dst.dtype))
+        if S > S_new:
+            pad = jnp.zeros(src.shape[:2] + (S - S_new,) + src.shape[3:],
+                            dst.dtype)
+            src = jnp.concatenate([src, pad], axis=2)
+        return jax.lax.dynamic_update_slice(dst, src, (0, slot, 0, 0, 0))
+
+    length = (slot_cache.length[0] if true_len is None
+              else jnp.asarray(true_len, jnp.int32))
+    return KVCache(wr(cache.k, slot_cache.k), wr(cache.v, slot_cache.v),
+                   cache.length.at[slot].set(length),
+                   cache.offset.at[slot].set(slot_cache.offset[0]))
+
+
+def read_slot(cache: KVCache, slot: int) -> KVCache:
+    """1-batch view of slot ``slot`` (tests / debugging)."""
+    return KVCache(cache.k[:, slot:slot + 1], cache.v[:, slot:slot + 1],
+                   cache.length[slot:slot + 1], cache.offset[slot:slot + 1])
+
+
 def write_prefix(k_layer: jax.Array, v_layer: jax.Array, new_k: jax.Array,
                  new_v: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Write a full prefix (B, S_new, KH, D) at position 0 (prefill)."""

@@ -50,6 +50,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--corpus-tokens", type=int, default=512)
     ap.add_argument("--kernel", default=None, choices=[None, "pallas"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable cache donation (copying decode steps; "
+                         "for differential debugging)")
+    ap.add_argument("--prefill-buckets", default="auto", metavar="SPEC",
+                    help="'auto' (default), 'none' (exact lengths), or a "
+                         "comma-separated bucket list, e.g. '16,32,64'")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="dump the metrics registry (JSON; .lp/.txt for "
                          "line protocol) at exit")
@@ -59,11 +65,19 @@ def main(argv=None) -> dict:
     if not args.full:
         cfg = cfg.reduced()
 
+    if args.prefill_buckets == "none":
+        buckets = None
+    elif args.prefill_buckets == "auto":
+        buckets = "auto"
+    else:
+        buckets = [int(b) for b in args.prefill_buckets.split(",")]
+
     with obs.span("serve.init", arch=args.arch):
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(args.seed))
         eng = ServingEngine(cfg, params, EngineConfig(
-            max_slots=args.slots, max_seq=args.max_seq, kernel=args.kernel))
+            max_slots=args.slots, max_seq=args.max_seq, kernel=args.kernel,
+            donate_cache=not args.no_donate, prefill_buckets=buckets))
 
     corpus = synthesize_corpus(CorpusSpec(
         "domain-0", args.corpus_tokens, cfg.vocab_size, seed=args.seed))
@@ -91,6 +105,11 @@ def main(argv=None) -> dict:
         "decode_step_p50_s": decode_lat.quantile(0.5),
         "slot_occupancy": reg.gauge("scheduler/slot_occupancy").value,
         "affinity_hits": reg.counter("scheduler/affinity_hits").value,
+        "prefill_buckets": list(eng.prefill_buckets or ()),
+        "prefill_compile_count":
+            int(reg.gauge("engine/prefill_compile_count").value),
+        "decode_cache_bytes_copied":
+            reg.gauge("engine/decode_cache_bytes_copied").value,
         "wave": wave_stats(done),
     }
     print(json.dumps(summary, indent=1))

@@ -128,9 +128,16 @@ def _layer_prefill(cfg: ModelConfig, x: jax.Array, lp: Params,
                    positions: jax.Array,
                    kc: jax.Array, vc: jax.Array,
                    shared: Optional[Tuple[jax.Array, jax.Array, jax.Array]],
-                   q_offset: jax.Array
+                   q_offset: jax.Array,
+                   true_len: Optional[jax.Array] = None
                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Prefill layer: causal attention + cache write + optional MoSKA path.
+
+    ``true_len`` (traced scalar ok): the real prompt length when the
+    sequence is right-padded to a prefill bucket. Pad queries are excluded
+    from router pooling so routing (and hence every real row's output)
+    matches the exact-length program; pad rows themselves produce garbage
+    that the caller discards.
 
     Returns (x_out, new_k_layer, new_v_layer, aux).
     """
@@ -148,7 +155,14 @@ def _layer_prefill(cfg: ModelConfig, x: jax.Array, lp: Params,
         B, S, H, D = q.shape
         rb = min(128, S)
         nb = S // rb
-        pooled = jnp.mean(q.reshape(B * nb, rb, H, D), axis=1)
+        if true_len is None:
+            pooled = jnp.mean(q.reshape(B * nb, rb, H, D), axis=1)
+        else:
+            valid = (jnp.arange(S) < true_len).astype(q.dtype)     # (S,)
+            qs = (q * valid[None, :, None, None]).reshape(B, nb, rb, H, D)
+            cnt = jnp.maximum(valid.reshape(nb, rb).sum(axis=1), 1.0)
+            pooled = (jnp.sum(qs, axis=2) /
+                      cnt[None, :, None, None]).reshape(B * nb, H, D)
         routing = router_lib.route(pooled, semb, cfg.moska.top_k_chunks)
         ctx = MA.MoskaLayerContext(sk, sv, routing)
         o = MA.moska_prefill_attention(
@@ -313,8 +327,17 @@ def _shared_layer(sh, dtype):
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
             cache: KVCache, store: Optional[SharedKVStore] = None,
             frontend_embeds: Optional[jax.Array] = None,
-            start_pos: int = 0) -> Tuple[jax.Array, KVCache]:
-    """Process the unique prefix; returns (last-token logits, filled cache)."""
+            start_pos: int = 0,
+            true_len: Optional[jax.Array] = None) -> Tuple[jax.Array, KVCache]:
+    """Process the unique prefix; returns (last-token logits, filled cache).
+
+    ``true_len`` (traced scalar ok): real prompt length when ``tokens`` is
+    right-padded to a prefill bucket — logits are taken at position
+    ``true_len - 1`` and the cache lengths record ``true_len``. Not
+    supported together with ``frontend_embeds``.
+    """
+    if true_len is not None and frontend_embeds is not None:
+        raise ValueError("true_len is not supported with frontend_embeds")
     x = embed_inputs(cfg, params, tokens, frontend_embeds)
     B, S, _ = x.shape
     positions = start_pos + jnp.arange(S)
@@ -327,16 +350,24 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
             lp, kc, vc = xs
             sh = None
         x, kc, vc, _ = _layer_prefill(cfg, x, lp, positions, kc, vc, sh,
-                                      jnp.asarray(start_pos))
+                                      jnp.asarray(start_pos),
+                                      true_len=true_len)
         return x, (kc, vc)
 
     xs = ((params["layers"], cache.k, cache.v) if shared is None else
           (params["layers"], cache.k, cache.v, shared))
     x, (k_new, v_new) = jax.lax.scan(scan_body, x, xs)
     x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
-    logits = jnp.einsum("bd,vd->bv", x[:, -1], unembed_matrix(cfg, params),
+    if true_len is None:
+        x_last = x[:, -1]
+        n_valid = jnp.asarray(S, jnp.int32)
+    else:
+        n_valid = jnp.asarray(true_len, jnp.int32)
+        x_last = jax.lax.dynamic_index_in_dim(x, n_valid - 1, axis=1,
+                                              keepdims=False)
+    logits = jnp.einsum("bd,vd->bv", x_last, unembed_matrix(cfg, params),
                         preferred_element_type=jnp.float32)
-    lengths = jnp.full((B,), S, jnp.int32)
+    lengths = jnp.full((B,), n_valid, jnp.int32)
     offsets = jnp.full((B,), start_pos, jnp.int32)
     return logits, KVCache(k_new, v_new, lengths, offsets)
 

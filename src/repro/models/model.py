@@ -59,14 +59,17 @@ class Model:
                                      abstract=abstract)
 
     def prefill(self, params, tokens, cache, store=None,
-                frontend_embeds=None, start_pos: int = 0):
+                frontend_embeds=None, start_pos: int = 0, true_len=None):
+        # true_len: real prompt length for bucket-padded serving prefill
+        # (dense-family only — the engine's zero-copy hot path)
+        kw = {} if true_len is None else {"true_len": true_len}
         if self.cfg.family in (VLM, AUDIO):
             return self._impl.prefill(self.cfg, params, tokens, cache,
                                       store=store,
                                       frontend_embeds=frontend_embeds,
-                                      start_pos=start_pos)
+                                      start_pos=start_pos, **kw)
         return self._impl.prefill(self.cfg, params, tokens, cache,
-                                  store=store, start_pos=start_pos)
+                                  store=store, start_pos=start_pos, **kw)
 
     def decode_step(self, params, tokens, cache, store=None, positions=None,
                     kernel: Optional[str] = None):

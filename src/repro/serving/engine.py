@@ -14,15 +14,27 @@ The full request path of the paper's system:
 
 Static shapes: (B slots, max_seq) so decode steps hit one compiled program.
 Slot raggedness is handled by per-slot lengths; inactive slots decode
-garbage into slot-local buffers that are reset on admission (masked out of
-results).
+garbage into slot-local buffers that are masked out of results.
+
+Zero-copy hot path: the (L, B, S, KH, D) unique-KV batch cache is allocated
+once, kept resident on device across ``run()`` calls, and **donated** into
+the jit'd decode step and the per-slot admission write — XLA mutates the
+cache buffer in place instead of copying it every wave
+(``engine/decode_cache_bytes_copied`` reports 0 when donation is on).
+Admission writes only the admitted slot (``kvcache.write_slot_prefix``),
+not a full-cache merge. Prefill prompt lengths are rounded up to a small
+bucket set so the prefill jit cache stays bounded
+(``engine/prefill_compile_count``) instead of growing with every distinct
+prompt length; pad positions are excluded from routing and logits so the
+bucketed program computes exactly what the exact-length program would.
+``run()`` may be called repeatedly on one engine; finished slots are
+rewritten (and their tails zeroed) on re-admission.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +44,61 @@ from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.scheduler import Request, Scheduler, SchedulerConfig
 from repro.core.shared_kv import SharedKVStore, build_store
+from repro.kvcache.cache import KVCache, write_slot_prefix
 from repro.models.model import Model, build_model
+
+#: smallest prefill bucket; "auto" buckets are powers of two from here up
+#: to 128, then multiples of 128 (the MoSKA prefill route-block size) up
+#: to max_seq.
+MIN_PREFILL_BUCKET = 16
+
+
+def resolve_prefill_buckets(spec: Union[str, Sequence[int], None],
+                            max_seq: int) -> Optional[Tuple[int, ...]]:
+    """Resolve an EngineConfig.prefill_buckets spec to a sorted tuple.
+
+    ``"auto"`` — powers of two in [16, 128], then multiples of 128, capped
+    at max_seq. ``None`` or an empty sequence — bucketing off (exact
+    prompt lengths; one prefill program per distinct length). A sequence —
+    used as-is (each bucket must be <= 128 or a multiple of 128 for the
+    routed shared-attention prefill to block evenly).
+    """
+    if spec is None:
+        return None
+    if isinstance(spec, str):
+        if spec != "auto":
+            raise ValueError(f"unknown prefill_buckets spec {spec!r}")
+        buckets = []
+        b = MIN_PREFILL_BUCKET
+        while b <= min(max_seq, 128):
+            buckets.append(b)
+            b *= 2
+        b = 256
+        while b <= max_seq:
+            buckets.append(b)
+            b += 128
+        return tuple(buckets) if buckets else None
+    buckets = tuple(sorted(set(int(b) for b in spec)))
+    if not buckets:
+        return None
+    for b in buckets:
+        if b < 1 or b > max_seq:
+            raise ValueError(f"prefill bucket {b} outside [1, {max_seq}]")
+        if b > 128 and b % 128:
+            raise ValueError(
+                f"prefill bucket {b} > 128 must be a multiple of 128 "
+                "(MoSKA prefill route-block size)")
+    return buckets
+
+
+def bucket_for(buckets: Optional[Tuple[int, ...]], n: int) -> int:
+    """Smallest bucket >= n; falls back to the exact length when bucketing
+    is off or n exceeds the largest bucket."""
+    if buckets:
+        for b in buckets:
+            if b >= n:
+                return b
+    return n
 
 
 @dataclass
@@ -47,6 +113,11 @@ class EngineConfig:
     # record dispatch-density metrics from inside the jit'd decode step
     # (trace-time switch; adds host callbacks to the compiled program)
     jit_metrics: bool = True
+    # donate the persistent batch cache into the jit'd decode step and the
+    # per-slot admission write (zero-copy; off = functional copies)
+    donate_cache: bool = True
+    # "auto" | None (exact lengths) | explicit bucket sequence
+    prefill_buckets: Union[str, Sequence[int], None] = "auto"
 
 
 class ServingEngine:
@@ -63,13 +134,28 @@ class ServingEngine:
             max_seq=engine_cfg.max_seq))
         if engine_cfg.jit_metrics:
             obs.enable_jit_metrics(True)
-        self._decode = jax.jit(self._decode_impl, static_argnames=("use_store",))
+        donate = engine_cfg.donate_cache
+        self._decode = jax.jit(self._decode_impl,
+                               static_argnames=("use_store",),
+                               donate_argnums=(2,) if donate else ())
+        self._prefill = jax.jit(self._prefill_impl,
+                                static_argnames=("use_store",))
+        self._write_slot = jax.jit(self._write_slot_impl,
+                                   donate_argnums=(0,) if donate else ())
+        self._buckets = resolve_prefill_buckets(engine_cfg.prefill_buckets,
+                                                engine_cfg.max_seq)
+        self._prefill_keys: set = set()
+        self._cache = None          # persistent (L, B, S, KH, D) batch cache
         self.metrics = {"decode_steps": 0, "prefills": 0,
                         "tokens_generated": 0, "wall_s": 0.0}
 
     @property
     def registry(self) -> obs.MetricsRegistry:
         return obs.get_registry()
+
+    @property
+    def prefill_buckets(self) -> Optional[Tuple[int, ...]]:
+        return self._buckets
 
     # ------------------------------------------------------------------
     def register_corpus(self, corpus_id: str, tokens: np.ndarray) -> int:
@@ -107,64 +193,123 @@ class ServingEngine:
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return nxt, cache
 
+    def _prefill_impl(self, params, tokens, true_len, start, store,
+                      use_store: bool):
+        """One request's (possibly bucket-padded) prefill into a fresh
+        1-batch cache sized to the bucket. Returns (first token, cache)."""
+        slot_cache = self.model.init_cache(1, tokens.shape[1],
+                                           self.ecfg.cache_dtype)
+        logits, slot_cache = self.model.prefill(
+            params, tokens, slot_cache,
+            store=store if use_store else None,
+            start_pos=start, true_len=true_len)
+        first = jnp.argmax(logits[0]).astype(jnp.int32)
+        return first, slot_cache
+
+    def _write_slot_impl(self, cache, slot_cache, slot, true_len):
+        return write_slot_prefix(cache, slot_cache, slot, true_len)
+
     def _active_store(self) -> Optional[SharedKVStore]:
         cid = self.scheduler.resident_corpus
         return self.stores.get(cid) if cid is not None else None
 
+    # ------------------------------------------------------------------
+    def _ensure_cache(self):
+        """The persistent batch cache: allocated once, reused across
+        ``run()`` calls (and reallocated only if a failed donated step
+        consumed it)."""
+        cache = self._cache
+        if cache is not None:
+            leaves = jax.tree.leaves(cache)
+            if any(getattr(l, "is_deleted", lambda: False)() for l in leaves):
+                cache = None
+        if cache is None:
+            cache = self.model.init_cache(self.ecfg.max_slots,
+                                          self.ecfg.max_seq,
+                                          self.ecfg.cache_dtype)
+        nbytes = sum(getattr(l, "nbytes", 0) for l in jax.tree.leaves(cache))
+        self.registry.set_gauge(
+            "engine/decode_cache_bytes_copied",
+            0 if self.ecfg.donate_cache else nbytes)
+        self.registry.set_gauge("engine/decode_cache_bytes", nbytes)
+        return cache
+
     def run(self, max_waves: int = 10**9) -> List[Request]:
-        """Drive to completion (or max_waves); returns finished requests."""
+        """Drive to completion (or max_waves); returns finished requests.
+
+        May be called repeatedly: the batch cache stays resident on device
+        between calls. Raises RuntimeError on a livelocked configuration
+        (queued work that can never be admitted under mem_budget_bytes).
+        """
         B = self.ecfg.max_slots
-        S = self.ecfg.max_seq
         reg = self.registry
         t0 = time.perf_counter()
         tok0 = self.metrics["tokens_generated"]
-        cache = self.model.init_cache(B, S, self.ecfg.cache_dtype)
+        cache = self._ensure_cache()
+        self._cache = None      # run() holds the only live reference
         slot_tokens = np.zeros((B,), np.int32)
 
         waves = 0
-        with obs.span("engine.run"):
-            while not self.scheduler.idle and waves < max_waves:
-                admitted = self.scheduler.schedule()
-                for req in admitted:
-                    tp = time.perf_counter()
-                    cache, first = self._prefill_slot(cache, req)
-                    reg.observe("engine/prefill_latency_s",
-                                time.perf_counter() - tp,
+        try:
+            with obs.span("engine.run"):
+                while not self.scheduler.idle and waves < max_waves:
+                    admitted = self.scheduler.schedule()
+                    for req in admitted:
+                        tp = time.perf_counter()
+                        cache, first = self._prefill_slot(cache, req)
+                        reg.observe("engine/prefill_latency_s",
+                                    time.perf_counter() - tp,
+                                    obs.LATENCY_EDGES_S)
+                        slot_tokens[req.slot] = first
+                        self.scheduler.record_token(req, int(first),
+                                                    self.ecfg.eos_id)
+                        self.metrics["tokens_generated"] += 1
+                        reg.inc("engine/tokens_generated")
+                    active = self.scheduler.active()
+                    if not active:
+                        if not admitted and not self.scheduler.idle:
+                            # nothing running, nothing admissible, queue
+                            # non-empty: no wave can ever make progress
+                            # (counted under scheduler/admission_deferred_mem)
+                            raise RuntimeError(
+                                "serving livelock: "
+                                f"{len(self.scheduler.queue)} queued "
+                                "request(s) but none admissible — "
+                                f"mem_budget_bytes="
+                                f"{self.ecfg.mem_budget_bytes:.3g} is below "
+                                "one slot's cost "
+                                f"({self.scheduler._slot_cost():.3g} bytes "
+                                "+ resident shared stores)")
+                        waves += 1
+                        continue
+                    store = self._active_store()
+                    use_store = store is not None and self.cfg.moska.enabled
+                    # batch density: fraction of the static wave the decode
+                    # step spends on live requests (the N of the GEMM)
+                    reg.observe("engine/wave_batch_density",
+                                len(active) / B, obs.FRACTION_EDGES)
+                    reg.observe("engine/wave_active_slots", len(active),
+                                obs.COUNT_EDGES)
+                    td = time.perf_counter()
+                    nxt, cache = self._decode(self.params,
+                                              jnp.asarray(slot_tokens),
+                                              cache, store, use_store)
+                    nxt = np.asarray(nxt)  # device sync: latency includes it
+                    reg.observe("engine/decode_step_latency_s",
+                                time.perf_counter() - td,
                                 obs.LATENCY_EDGES_S)
-                    slot_tokens[req.slot] = first
-                    self.scheduler.record_token(req, int(first),
-                                                self.ecfg.eos_id)
-                    self.metrics["tokens_generated"] += 1
-                    reg.inc("engine/tokens_generated")
-                active = self.scheduler.active()
-                if not active:
+                    for req in list(active):
+                        tok = int(nxt[req.slot])
+                        slot_tokens[req.slot] = tok
+                        self.scheduler.record_token(req, tok, self.ecfg.eos_id)
+                        self.metrics["tokens_generated"] += 1
+                        reg.inc("engine/tokens_generated")
+                        reg.inc("engine/decoded_tokens")
+                    self.metrics["decode_steps"] += 1
+                    reg.inc("engine/decode_steps")
                     waves += 1
-                    continue
-                store = self._active_store()
-                use_store = store is not None and self.cfg.moska.enabled
-                # batch density: fraction of the static wave the decode
-                # step spends on live requests (the N of the GEMM batching)
-                reg.observe("engine/wave_batch_density", len(active) / B,
-                            obs.FRACTION_EDGES)
-                reg.observe("engine/wave_active_slots", len(active),
-                            obs.COUNT_EDGES)
-                td = time.perf_counter()
-                nxt, cache = self._decode(self.params,
-                                          jnp.asarray(slot_tokens), cache,
-                                          store, use_store)
-                nxt = np.asarray(nxt)   # device sync: latency includes it
-                reg.observe("engine/decode_step_latency_s",
-                            time.perf_counter() - td, obs.LATENCY_EDGES_S)
-                for req in list(active):
-                    tok = int(nxt[req.slot])
-                    slot_tokens[req.slot] = tok
-                    self.scheduler.record_token(req, tok, self.ecfg.eos_id)
-                    self.metrics["tokens_generated"] += 1
-                    reg.inc("engine/tokens_generated")
-                    reg.inc("engine/decoded_tokens")
-                self.metrics["decode_steps"] += 1
-                reg.inc("engine/decode_steps")
-                waves += 1
+        finally:
+            self._cache = cache
         wall = time.perf_counter() - t0
         self.metrics["wall_s"] += wall
         reg.set_gauge("engine/last_run_wall_s", wall)
@@ -175,12 +320,40 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def _prefill_slot(self, cache, req: Request):
-        """Prefill one slot; single-request prefill merged into the batch
-        cache (per-slot write)."""
+        """Prefill one slot: bucket-padded jit'd prefill + in-place per-slot
+        write into the (donated) batch cache."""
+        store = self.stores.get(req.corpus_id)
+        if not isinstance(cache, KVCache):
+            # non-KVCache families (ssm/hybrid/encdec states): legacy
+            # full-merge path, exact lengths
+            return self._prefill_slot_fallback(cache, req, store)
+        true_len = len(req.prompt)
+        pad_len = bucket_for(self._buckets, true_len)
+        padded = np.zeros((1, pad_len), np.int32)
+        padded[0, :true_len] = req.prompt
+        start = store.total_tokens if store is not None else 0
+        use_store = store is not None and self.cfg.moska.enabled
+        key = (pad_len, use_store,
+               tuple(store.k.shape) if use_store else None)
+        if key not in self._prefill_keys:
+            self._prefill_keys.add(key)
+            self.registry.set_gauge("engine/prefill_compile_count",
+                                    len(self._prefill_keys))
+        first, slot_cache = self._prefill(
+            self.params, jnp.asarray(padded),
+            jnp.asarray(true_len, jnp.int32), jnp.asarray(start, jnp.int32),
+            store, use_store)
+        cache = self._write_slot(cache, slot_cache,
+                                 jnp.asarray(req.slot, jnp.int32),
+                                 jnp.asarray(true_len, jnp.int32))
+        self.metrics["prefills"] += 1
+        self.registry.inc("engine/prefills")
+        return cache, int(first)
+
+    def _prefill_slot_fallback(self, cache, req: Request, store):
         toks = jnp.asarray(req.prompt, jnp.int32)[None]
         slot_cache = self.model.init_cache(1, self.ecfg.max_seq,
                                            self.ecfg.cache_dtype)
-        store = self.stores.get(req.corpus_id)
         start = store.total_tokens if store is not None else 0
         logits, slot_cache = self.model.prefill(
             self.params, toks, slot_cache, store=store, start_pos=start)
@@ -192,7 +365,8 @@ class ServingEngine:
 
 
 def _merge_slot_cache(cache, slot_cache, slot: int):
-    """Copy a 1-batch cache pytree into batch slot ``slot``."""
+    """Copy a 1-batch cache pytree into batch slot ``slot`` (full-copy
+    reference path; the KVCache hot path uses ``write_slot_prefix``)."""
     def merge(dst, src):
         if dst.ndim == 1:          # (B,) lengths / offsets
             return dst.at[slot].set(src[0])

@@ -43,6 +43,7 @@ def _drive(sched: Scheduler, rng, n_requests, corpora, max_steps=10_000):
         sched.schedule()
         _check_conservation(sched, submitted)
         _check_budget(sched)
+        _check_single_corpus_wave(sched)
         # one decode wave: every active request yields a token
         for req in list(sched.active()):
             sched.record_token(req, 7)
@@ -68,6 +69,16 @@ def _check_conservation(sched: Scheduler, submitted: int):
 
 def _check_budget(sched: Scheduler):
     assert sched._used_bytes() <= sched.cfg.mem_budget_bytes
+
+
+def _check_single_corpus_wave(sched: Scheduler):
+    """The decode step attends one shared store for all slots, so a wave
+    must never mix corpora — and every active request must be on the
+    corpus the engine will resolve the store from (resident_corpus)."""
+    corpora = {r.corpus_id for r in sched.active()}
+    assert len(corpora) <= 1, f"mixed-corpus wave: {corpora}"
+    if corpora:
+        assert corpora == {sched.resident_corpus}
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +139,64 @@ def test_affinity_no_indefinite_starvation():
     assert waves <= max_skips + 2
     reg = obs.get_registry()
     assert reg.counter("scheduler/affinity_preemptions").value >= 1
+
+
+def test_wave_never_mixes_corpora():
+    """Regression (wrong-store decode): an affinity miss used to pop a
+    request on another corpus into a live wave without flipping residency,
+    so the engine fed every slot the resident store. Mismatched requests
+    must be deferred until the resident wave drains."""
+    sched = Scheduler(SchedulerConfig(max_slots=4))
+    sched.submit([1], 3, "A")
+    sched.submit([1], 1, "B")
+    sched.submit([1], 3, "A")
+    waves = 0
+    while not sched.idle and waves < 50:
+        sched.schedule()
+        _check_single_corpus_wave(sched)
+        for req in list(sched.active()):
+            sched.record_token(req, 7)
+        waves += 1
+    assert sched.idle
+    # B was deferred, not dropped: it ran in its own (post-drain) wave
+    assert {r.corpus_id for r in sched.finished} == {"A", "B"}
+    # and residency flipped to B when it ran
+    b = next(r for r in sched.finished if r.corpus_id == "B")
+    assert b.generated == [7]
+
+
+def test_mixed_none_and_corpus_never_share_wave():
+    """corpus_id=None (no store) counts as its own corpus: the decode
+    step's use_store flag is wave-global, so a None request must not ride
+    in a store-attached wave."""
+    sched = Scheduler(SchedulerConfig(max_slots=2))
+    sched.submit([1], 2, "A")
+    sched.submit([1], 2, None)
+    sched.submit([1], 2, "A")
+    waves = 0
+    while not sched.idle and waves < 50:
+        sched.schedule()
+        _check_single_corpus_wave(sched)
+        for req in list(sched.active()):
+            sched.record_token(req, 7)
+        waves += 1
+    assert sched.idle and len(sched.finished) == 3
+
+
+def test_submit_validation():
+    sched = Scheduler(SchedulerConfig(max_slots=1, max_seq=32))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sched.submit([1, 2], 0)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sched.submit([1, 2], -3)
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit([], 4)
+    with pytest.raises(ValueError, match="max_seq"):
+        sched.submit([1] * 30, 4)
+    # nothing was enqueued by the rejected submissions
+    assert not sched.queue
+    sched.submit([1, 2], 1)
+    assert len(sched.queue) == 1
 
 
 def test_affinity_still_prefers_resident_corpus():
