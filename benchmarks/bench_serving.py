@@ -11,9 +11,12 @@ counts from ``engine/tokens_generated``, corpus registration from the
 registry so the two configurations don't mix.
 
 Also benchmarks the zero-copy hot path (donated persistent cache vs
-copying decode steps, ``engine/decode_cache_bytes_copied``) and runs a
+copying decode steps, ``engine/decode_cache_bytes_copied``), runs a
 prompt-length sweep asserting the bucketed prefill jit cache stays bounded
-(``engine/prefill_compile_count`` <= bucket count).
+(``engine/prefill_compile_count`` <= bucket count), and compares the paged
+KV layout against the slotted one on a skewed prompt mix under an equal
+memory budget (``record["paged_vs_slotted"]``: HBM high water, deferred
+admissions, generation identity).
 
     PYTHONPATH=src python -m benchmarks.bench_serving --json-out BENCH_serving.json
 
@@ -37,7 +40,7 @@ from repro.serving.engine import (EngineConfig, ServingEngine,
 
 
 def _run_engine(cfg, params, ecfg, submits):
-    """Run one engine on a fresh registry; returns the registry."""
+    """Run one engine on a fresh registry; returns (registry, gens)."""
     reg = obs.MetricsRegistry()
     prev = obs.set_registry(reg)
     try:
@@ -46,10 +49,10 @@ def _run_engine(cfg, params, ecfg, submits):
             eng.register_corpus(corpus_id, corpus)
         for prompt, new, cid in submits["requests"]:
             eng.submit(prompt, max_new_tokens=new, corpus_id=cid)
-        eng.run()
+        done = eng.run()
     finally:
         obs.set_registry(prev)
-    return reg
+    return reg, {r.uid: tuple(r.generated) for r in done}
 
 
 def run(emit):
@@ -69,7 +72,7 @@ def run(emit):
 
     # MoSKA: corpus KV precomputed once, requests route into it; decode
     # waves mutate the donated persistent cache (zero-copy hot path)
-    reg = _run_engine(cfg, params, EngineConfig(max_slots=3, max_seq=64), {
+    reg, _ = _run_engine(cfg, params, EngineConfig(max_slots=3, max_seq=64), {
         "corpora": [("d0", corpus)],
         "requests": [(p, 6, "d0") for p in prompts],
     })
@@ -98,7 +101,7 @@ def run(emit):
             f"{util.mean:.3f}")
 
     # same workload with donation off: every decode step copies the cache
-    reg_nd = _run_engine(cfg, params,
+    reg_nd, _ = _run_engine(cfg, params,
                          EngineConfig(max_slots=3, max_seq=64,
                                       donate_cache=False), {
                              "corpora": [("d0", corpus)],
@@ -110,7 +113,7 @@ def run(emit):
             f"donated_mean={lat.mean * 1e6:.0f}us")
 
     # baseline: no shared store; every request prefills corpus+prompt
-    reg2 = _run_engine(cfg, params,
+    reg2, _ = _run_engine(cfg, params,
                        EngineConfig(max_slots=3, max_seq=320), {
                            "requests": [(corpus.tolist() + p, 6, None)
                                         for p in prompts],
@@ -126,7 +129,7 @@ def run(emit):
     # prompt-length sweep: the bucketed prefill jit cache must stay bounded
     # (one program per bucket, not per distinct prompt length)
     sweep_lengths = [17, 18, 33, 34, 65, 66, 129, 130]
-    reg3 = _run_engine(cfg, params,
+    reg3, _ = _run_engine(cfg, params,
                        EngineConfig(max_slots=2, max_seq=256), {
                            "corpora": [("d0", corpus)],
                            "requests": [([2] * n, 2, "d0")
@@ -143,6 +146,40 @@ def run(emit):
         "bucket_count": len(buckets),
         "compile_count": compiles,
     }
+
+    # paged vs slotted KV layout: same skewed prompt mix (one long prompt,
+    # several short ones) under an equal unique-KV budget of 3 slots. The
+    # slotted layout charges every request a full max_seq slab, so it runs
+    # the queue 3 at a time; the paged pool charges only the blocks a
+    # request can touch, fits the whole mix concurrently, and peaks lower.
+    skew = [[2] * 40, [3] * 15] + [[4 + i] * 6 for i in range(4)]
+    budget = 3 * 64 * cfg.kv_bytes_per_token
+    pvs = {"prompt_lengths": [len(p) for p in skew],
+           "mem_budget_bytes": budget}
+    gens = {}
+    for layout in ("slotted", "paged"):
+        regp, gens[layout] = _run_engine(
+            cfg, params,
+            EngineConfig(max_slots=6, max_seq=64, kv_layout=layout,
+                         mem_budget_bytes=budget), {
+                "requests": [(p, 4, None) for p in skew],
+            })
+        pvs[layout] = {
+            "hbm_high_water_bytes":
+                int(regp.gauge("engine/hbm_high_water_bytes").value),
+            "admissions_deferred":
+                int(regp.counter("scheduler/admission_deferred_mem").value),
+            "decode_waves": int(regp.counter("engine/decode_steps").value),
+            "tokens": int(regp.counter("engine/tokens_generated").value),
+        }
+    pvs["identical_generations"] = gens["slotted"] == gens["paged"]
+    record["paged_vs_slotted"] = pvs
+    rec("serving/paged/hbm_high_water_bytes", 0.0,
+        f"paged={pvs['paged']['hbm_high_water_bytes']}B_"
+        f"slotted={pvs['slotted']['hbm_high_water_bytes']}B")
+    rec("serving/paged/admissions_deferred", 0.0,
+        f"paged={pvs['paged']['admissions_deferred']}_"
+        f"slotted={pvs['slotted']['admissions_deferred']}")
     return record
 
 

@@ -55,6 +55,7 @@ def moska_decode_attention(
     *,
     window: int = 0,
     kernel: Optional[str] = None,
+    layer_idx: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Returns merged attention output (B, H, D)."""
     o_u, lse_u = L.decode_attention(q, k_cache, v_cache, kv_len,
@@ -63,7 +64,8 @@ def moska_decode_attention(
         return o_u
     part = sa.shared_attention_batched(
         q[:, None], ctx.k, ctx.v, ctx.routing,
-        capacity_factor=cfg.query_capacity_factor, kernel=kernel)
+        capacity_factor=cfg.query_capacity_factor, kernel=kernel,
+        layer_idx=layer_idx)
     o_s = part.out[:, 0]                 # (B, H, D)
     lse_s = part.lse[:, 0]               # (B, H)
     _record_merge(lse_u, lse_s, "decode")
@@ -82,6 +84,7 @@ def moska_prefill_attention(
     window: int = 0,
     route_block: int = 128,
     kernel: Optional[str] = None,
+    layer_idx: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Prefill: causal attention over the unique prefix, plus routed shared
     attention for every query block when a shared corpus is attached."""
@@ -96,7 +99,8 @@ def moska_prefill_attention(
     qg = q.reshape(B * nb, route_block, H, D)
     part = sa.shared_attention_batched(
         qg, ctx.k, ctx.v, ctx.routing,
-        capacity_factor=cfg.query_capacity_factor, kernel=kernel)
+        capacity_factor=cfg.query_capacity_factor, kernel=kernel,
+        layer_idx=layer_idx)
     o_s = part.out.reshape(B, S, H, D)
     lse_s = part.lse.reshape(B, S, H)
     _record_merge(lse_u, lse_s, "prefill")

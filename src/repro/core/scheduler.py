@@ -35,9 +35,10 @@ import collections
 import dataclasses
 import itertools
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 from repro import obs
+from repro.kvcache.block_table import blocks_for
 
 
 @dataclass
@@ -67,6 +68,12 @@ class SchedulerConfig:
     corpus_affinity: bool = True
     # starvation bound: force the queue head after this many affinity skips
     affinity_max_skips: int = 64
+    # "slotted": every admitted request is charged max_seq tokens of unique
+    # KV. "paged": charged only the blocks its prompt + generation budget
+    # actually needs (block-budget accounting; admits more concurrent
+    # requests at equal HBM), and prompts may exceed max_seq.
+    kv_layout: str = "slotted"
+    block_size: int = 16
 
 
 class Scheduler:
@@ -77,7 +84,13 @@ class Scheduler:
         self.finished: List[Request] = []
         self._uid = itertools.count()
         self.resident_corpus: Optional[str] = None
-        self.shared_bytes: float = 0.0
+        # shared-store registry: corpus_id -> {nbytes, loaded, last_use}.
+        # "loaded" stores hold device HBM and count against the budget;
+        # cold ones are LRU-evicted via the engine's evictor callback and
+        # reloaded on demand.
+        self._stores: Dict[str, dict] = {}
+        self._store_clock = itertools.count()
+        self._store_evictor: Optional[Callable[[str], None]] = None
 
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -88,25 +101,100 @@ class Scheduler:
                 "(the prefill always produces one token)")
         if not prompt:
             raise ValueError("empty prompt")
-        if len(prompt) + max_new_tokens > self.cfg.max_seq:
+        total = len(prompt) + max_new_tokens
+        if self.cfg.kv_layout == "paged":
+            cost = self._token_cost(total)
+            if cost > self.cfg.mem_budget_bytes:
+                raise ValueError(
+                    f"prompt ({len(prompt)} tokens) + max_new_tokens "
+                    f"({max_new_tokens}) needs "
+                    f"{blocks_for(total, self.cfg.block_size)} KV blocks "
+                    f"({cost:.3g} bytes), exceeding the block budget "
+                    f"(mem_budget_bytes={self.cfg.mem_budget_bytes:.3g})")
+        elif total > self.cfg.max_seq:
             raise ValueError(
                 f"prompt ({len(prompt)} tokens) + max_new_tokens "
-                f"({max_new_tokens}) exceeds max_seq={self.cfg.max_seq}")
+                f"({max_new_tokens}) exceeds max_seq={self.cfg.max_seq} "
+                "for the slotted KV layout; the paged layout "
+                "(EngineConfig(kv_layout='paged')) admits long prompts "
+                "up to the block budget")
         uid = next(self._uid)
         self.queue.append(Request(uid, list(prompt), max_new_tokens,
                                   corpus_id))
         return uid
 
+    # -- memory accounting ---------------------------------------------
+    @property
+    def shared_bytes(self) -> float:
+        """Device bytes held by currently-loaded shared stores."""
+        return sum(e["nbytes"] for e in self._stores.values() if e["loaded"])
+
+    def _token_cost(self, n_tokens: int) -> float:
+        bs = self.cfg.block_size
+        return (blocks_for(n_tokens, bs) * bs *
+                self.cfg.unique_bytes_per_token)
+
     def _slot_cost(self) -> float:
         return self.cfg.unique_bytes_per_token * self.cfg.max_seq
 
-    def _used_bytes(self) -> float:
-        n = sum(1 for s in self.slots if s is not None)
-        return self.shared_bytes + n * self._slot_cost()
+    def _request_cost(self, req: Optional[Request] = None) -> float:
+        """Unique-KV bytes one request charges against the budget: a full
+        max_seq slot in the slotted layout, only its own blocks in paged."""
+        if self.cfg.kv_layout != "paged" or req is None:
+            return self._slot_cost()
+        return self._token_cost(len(req.prompt) + req.max_new_tokens)
 
-    def admissible(self) -> bool:
-        return self._used_bytes() + self._slot_cost() <= \
+    def _used_bytes(self) -> float:
+        return self.shared_bytes + sum(
+            self._request_cost(s) for s in self.slots if s is not None)
+
+    def admissible(self, req: Optional[Request] = None) -> bool:
+        return self._used_bytes() + self._request_cost(req) <= \
             self.cfg.mem_budget_bytes
+
+    # -- shared-store registry / LRU eviction ---------------------------
+    def set_store_evictor(self, fn: Callable[[str], None]) -> None:
+        """Engine callback dropping a store's device arrays on eviction."""
+        self._store_evictor = fn
+
+    def register_store(self, corpus_id: str, nbytes: float) -> None:
+        self._stores[corpus_id] = {"nbytes": float(nbytes), "loaded": True,
+                                   "last_use": next(self._store_clock)}
+
+    def touch_store(self, corpus_id: Optional[str]) -> None:
+        e = self._stores.get(corpus_id)
+        if e is not None:
+            e["last_use"] = next(self._store_clock)
+
+    def store_loaded(self, corpus_id: str) -> bool:
+        e = self._stores.get(corpus_id)
+        return bool(e and e["loaded"])
+
+    def mark_store_loaded(self, corpus_id: str, loaded: bool = True) -> None:
+        e = self._stores.get(corpus_id)
+        if e is not None:
+            e["loaded"] = loaded
+            if loaded:
+                e["last_use"] = next(self._store_clock)
+
+    def _evict_stores_for(self, need_bytes: float,
+                          keep: Optional[str] = None) -> bool:
+        """LRU-evict cold loaded stores (never ``keep`` / the resident
+        corpus) until ``need_bytes`` fits in the budget. Returns success."""
+        reg = obs.get_registry()
+        while self._used_bytes() + need_bytes > self.cfg.mem_budget_bytes:
+            victims = [(e["last_use"], cid)
+                       for cid, e in self._stores.items()
+                       if e["loaded"] and cid != keep
+                       and cid != self.resident_corpus]
+            if not victims:
+                return False
+            _, cid = min(victims)
+            self._stores[cid]["loaded"] = False
+            reg.inc("scheduler/store_evictions")
+            if self._store_evictor is not None:
+                self._store_evictor(cid)
+        return True
 
     # ------------------------------------------------------------------
     def schedule(self) -> List[Request]:
@@ -116,11 +204,14 @@ class Scheduler:
         for i, s in enumerate(self.slots):
             if s is not None or not self.queue:
                 continue
-            if not self.admissible():
-                obs.get_registry().inc("scheduler/admission_deferred_mem")
-                break
             req = self._pick_next()
             if req is None:
+                break
+            if not self.admissible(req) and \
+                    not self._evict_stores_for(self._request_cost(req),
+                                               keep=req.corpus_id):
+                obs.get_registry().inc("scheduler/admission_deferred_mem")
+                self.queue.appendleft(req)     # re-picked first next time
                 break
             req.slot = i
             self.slots[i] = req

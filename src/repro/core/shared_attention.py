@@ -35,17 +35,26 @@ from repro.sharding import lsc
 NEG_INF = -1e30
 
 
-def _record_dispatch(qmask: jax.Array, keep: jax.Array) -> None:
+def _record_dispatch(qmask: jax.Array, keep: jax.Array,
+                     layer_idx: Optional[jax.Array] = None) -> None:
     """Dispatch-density metrics (paper's compute-bound claim hinges on
     these): fraction of (chunk, capacity) slots filled, and how many
     (group, k) routes fell off the capacity cliff. Runs inside the jit'd
     decode step, so it goes through the trace-time-gated obs callbacks —
-    a no-op unless the serving engine enabled jit metrics."""
+    a no-op unless the serving engine enabled jit metrics.
+
+    ``layer_idx`` (traced scalar, from the layer scan) additionally files
+    the utilization under a per-layer histogram
+    (``moska/dispatch_capacity_utilization_by_layer/L{i}``) so routing
+    hot spots are attributable to individual layers."""
     if not obs.metrics.JIT_METRICS:
         return
-    obs.jit_observe("moska/dispatch_capacity_utilization",
-                    jnp.mean(qmask.astype(jnp.float32)),
+    util = jnp.mean(qmask.astype(jnp.float32))
+    obs.jit_observe("moska/dispatch_capacity_utilization", util,
                     edges=obs.FRACTION_EDGES)
+    if layer_idx is not None:
+        obs.jit_observe_per("moska/dispatch_capacity_utilization_by_layer",
+                            layer_idx, util, edges=obs.FRACTION_EDGES)
     obs.jit_inc("moska/dispatched_queries", jnp.sum(keep))
     obs.jit_inc("moska/dropped_queries", jnp.sum(~keep))
 
@@ -100,6 +109,7 @@ def shared_attention_batched(
     capacity_factor: float = 2.0,
     kernel: Optional[str] = None,  # None|'jnp'|'pallas'
     block_c: Optional[int] = None,  # kv-tile size for the pallas kernel
+    layer_idx: Optional[jax.Array] = None,  # for per-layer dispatch metrics
 ) -> SharedPartial:
     """Batched Shared KV Attention over routed chunks."""
     G, Q, H, D = q.shape
@@ -118,7 +128,7 @@ def shared_attention_batched(
     qd = lsc(qd, "chunks", None, None, "heads", None)
     qmask = jnp.zeros((E, capacity), bool).at[flat, drop_pos].set(
         keep, mode="drop")
-    _record_dispatch(qmask, keep)
+    _record_dispatch(qmask, keep, layer_idx)
 
     if kernel == "pallas":
         from repro.kernels import ops as kops

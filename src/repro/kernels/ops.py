@@ -11,6 +11,8 @@ import jax
 
 from repro.kernels.decode_attn import decode_attention as _decode
 from repro.kernels.lse_merge import lse_merge as _merge
+from repro.kernels.paged_decode_attn import (
+    paged_decode_attention as _paged_decode)
 from repro.kernels.router_score import router_scores as _router
 from repro.kernels.shared_chunk_attn import (
     shared_chunk_attention as _shared)
@@ -28,6 +30,12 @@ def decode_attention(q, k, v, kv_len, *, block_s: int = 1024,
                      interpret: bool | None = None):
     it = INTERPRET if interpret is None else interpret
     return _decode(q, k, v, kv_len, block_s=block_s, interpret=it)
+
+
+def paged_decode_attention(q, k_pool, v_pool, table, kv_len, *,
+                           interpret: bool | None = None):
+    it = INTERPRET if interpret is None else interpret
+    return _paged_decode(q, k_pool, v_pool, table, kv_len, interpret=it)
 
 
 def lse_merge(outs, lses, *, block_n: int = 256,

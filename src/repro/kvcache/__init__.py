@@ -2,3 +2,10 @@ from repro.kvcache.cache import (  # noqa: F401
     KVCache, abstract_kv_cache, append_token, init_kv_cache, read_slot,
     write_prefix, write_slot_prefix,
 )
+from repro.kvcache.block_table import (  # noqa: F401
+    NULL_BLOCK, SlotTables, blocks_for, validate_block_size,
+)
+from repro.kvcache.paged import (  # noqa: F401
+    BlockPool, PagedKVCache, PoolExhausted, append_layer, copy_block,
+    gather_layer, grow_paged_kv_cache, init_paged_kv_cache, write_blocks,
+)

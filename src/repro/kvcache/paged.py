@@ -1,0 +1,262 @@
+"""Paged unique-KV cache: a block pool + ref-counted allocator.
+
+Instead of one ``(L, B, max_seq, KH, D)`` slab where every slot pays for
+the worst-case prompt, the paged layout keeps a pool of fixed-size pages
+
+    k_pool, v_pool : (L, num_blocks, block_size, KH, D)
+
+and maps each request's tokens onto pages through a block table
+(``repro.kvcache.block_table``). Pages are recycled through a free list;
+ref-counting lets several requests map the *same* physical page
+(prefix sharing) with copy-on-write when one of them needs to append into
+a shared page. This is the PagedAttention allocation model, fitted to the
+MoSKA engine: short requests stop paying ``max_seq`` HBM, and identical
+prompts over the same shared corpus are deduplicated into one set of
+pages.
+
+Split of responsibilities:
+  * :class:`BlockPool` — host-side allocator (ids only, no device data):
+    free list, refcounts, alloc/incref/free, CoW arbitration. Pure Python
+    so the scheduler/engine can run it without touching the device, and
+    so hypothesis can hammer its invariants.
+  * :class:`PagedKVCache` + the jit-friendly array ops below — the device
+    data path: block-granular writes at admission, per-token scatter
+    appends at decode, table gathers that rebuild a contiguous view for
+    the attention (bit-identical to the slotted path when the view tiles
+    ``max_seq`` exactly).
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kvcache.block_table import NULL_BLOCK
+
+
+class PoolExhausted(RuntimeError):
+    """No free block available (after any possible eviction)."""
+
+
+class BlockPool:
+    """Ref-counted free-list allocator over ``num_blocks`` physical pages.
+
+    Block ``NULL_BLOCK`` (= 0) is reserved at construction: it is never
+    handed out, it absorbs the decode wave's garbage-lane writes.
+
+    Invariants (property-tested in tests/test_paged_kvcache.py):
+      * a block is either free or has refcount >= 1, never both;
+      * ``len(free) + len(live) == num_blocks - 1`` at all times;
+      * refcounts never go negative; freeing to refcount 0 returns the
+        block to the free list exactly once.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError(
+                f"need >= 2 blocks (one is the reserved null block), "
+                f"got {num_blocks}")
+        self.num_blocks = num_blocks
+        # LIFO free list: recently freed pages are re-used first (their
+        # contents are garbage either way; LIFO keeps the working set hot)
+        self._free: List[int] = list(range(num_blocks - 1, NULL_BLOCK, -1))
+        self._ref = {}  # block id -> refcount >= 1
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (the null block is not allocatable)."""
+        return self.num_blocks - 1
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._ref)
+
+    def refcount(self, block_id: int) -> int:
+        return self._ref.get(block_id, 0)
+
+    def is_free(self, block_id: int) -> bool:
+        return block_id not in self._ref and block_id != NULL_BLOCK
+
+    # -- allocation ------------------------------------------------------
+    def alloc(self, n: int = 1) -> List[int]:
+        """Allocate ``n`` blocks with refcount 1; raises PoolExhausted
+        (allocating nothing) when fewer than ``n`` are free."""
+        if n < 0:
+            raise ValueError(f"negative allocation {n}")
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"need {n} blocks, {len(self._free)} free "
+                f"(pool of {self.capacity})")
+        ids = [self._free.pop() for _ in range(n)]
+        for b in ids:
+            self._ref[b] = 1
+        return ids
+
+    def incref(self, block_ids: Sequence[int]) -> None:
+        """Map already-live blocks into another table (prefix sharing)."""
+        for b in block_ids:
+            if b == NULL_BLOCK:
+                continue
+            if b not in self._ref:
+                raise ValueError(f"incref of free block {b}")
+            self._ref[b] += 1
+
+    def free(self, block_ids: Sequence[int]) -> int:
+        """Drop one reference per id; returns how many blocks actually
+        returned to the free list (refcount hit 0)."""
+        released = 0
+        for b in block_ids:
+            if b == NULL_BLOCK:
+                continue
+            c = self._ref.get(b)
+            if c is None:
+                raise ValueError(f"double free of block {b}")
+            if c == 1:
+                del self._ref[b]
+                self._free.append(b)
+                released += 1
+            else:
+                self._ref[b] = c - 1
+        return released
+
+    def needs_copy(self, block_id: int) -> bool:
+        """True when writing into ``block_id`` requires copy-on-write
+        (the page is mapped by more than one table)."""
+        return self._ref.get(block_id, 0) > 1
+
+    def grow(self, num_blocks: int) -> None:
+        """Extend the pool (matches a device-side pool reallocation)."""
+        if num_blocks <= self.num_blocks:
+            return
+        self._free.extend(range(self.num_blocks, num_blocks))
+        self.num_blocks = num_blocks
+
+    def check_invariants(self) -> None:
+        """Raises AssertionError on a corrupted pool (tests call this
+        after every operation)."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate ids in free list"
+        assert NULL_BLOCK not in free, "null block leaked into free list"
+        assert not (free & set(self._ref)), "block both free and live"
+        assert all(c >= 1 for c in self._ref.values()), "refcount < 1"
+        assert len(free) + len(self._ref) == self.capacity, \
+            "block conservation violated"
+
+
+# ---------------------------------------------------------------------------
+# device data path
+# ---------------------------------------------------------------------------
+
+class PagedKVCache(NamedTuple):
+    """The physical page pool, layer-stacked like the slotted KVCache so
+    the decoder ``lax.scan`` consumes one layer slice per step."""
+    k: jax.Array          # (L, N, block_size, KH, D)
+    v: jax.Array          # (L, N, block_size, KH, D)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def nbytes(self) -> int:
+        return self.k.nbytes + self.v.nbytes
+
+
+def init_paged_kv_cache(num_layers: int, num_blocks: int, block_size: int,
+                        kv_heads: int, head_dim: int,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    shape = (num_layers, num_blocks, block_size, kv_heads, head_dim)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def grow_paged_kv_cache(pool: PagedKVCache, num_blocks: int) -> PagedKVCache:
+    """Pool with more pages; existing page contents (and ids) preserved."""
+    L, N, bs, KH, D = pool.k.shape
+    if num_blocks <= N:
+        return pool
+    pad = jnp.zeros((L, num_blocks - N, bs, KH, D), pool.k.dtype)
+    return PagedKVCache(jnp.concatenate([pool.k, pad], axis=1),
+                        jnp.concatenate([pool.v, pad], axis=1))
+
+
+def gather_layer(pool_layer: jax.Array, table: jax.Array) -> jax.Array:
+    """Rebuild a contiguous per-slot view from one layer's pool.
+
+    pool_layer: (N, bs, KH, D); table: (B, M) int32 physical block ids
+    (NULL_BLOCK padding gathers finite garbage — positions past a slot's
+    length are masked to exactly-zero probability by the attention, so the
+    result is bit-identical to attending the slotted cache when
+    ``M * bs == max_seq``). Returns (B, M * bs, KH, D).
+    """
+    B, M = table.shape
+    N, bs, KH, D = pool_layer.shape
+    view = pool_layer[table]                     # (B, M, bs, KH, D)
+    return view.reshape(B, M * bs, KH, D)
+
+
+def append_layer(pool_layer: jax.Array, new: jax.Array, table: jax.Array,
+                 lengths: jax.Array) -> jax.Array:
+    """Scatter one new token per slot into its current page.
+
+    pool_layer: (N, bs, KH, D); new: (B, KH, D); lengths: (B,) — token b
+    lands at ``(table[b, lengths[b] // bs], lengths[b] % bs)``. Inactive
+    slots' table rows are NULL, so their garbage tokens land in the null
+    page. The block index is clamped like the slotted path's
+    dynamic_update_slice, so an inactive slot whose stale length keeps
+    growing writes to the null page instead of going out of bounds.
+    """
+    B, M = table.shape
+    bs = pool_layer.shape[1]
+    idx = jnp.clip(lengths // bs, 0, M - 1)
+    blocks = table[jnp.arange(B), idx]           # (B,)
+    offs = lengths % bs
+    return pool_layer.at[blocks, offs].set(new.astype(pool_layer.dtype))
+
+
+def write_blocks(pool: PagedKVCache, block_ids: jax.Array,
+                 k_new: jax.Array, v_new: jax.Array,
+                 true_len=None) -> PagedKVCache:
+    """Block-granular admission write: scatter a prefilled prefix into the
+    pool pages named by ``block_ids``.
+
+    k_new/v_new: (L, S, KH, D) with S a multiple of block_size;
+    block_ids: (S // block_size,) int32, NULL_BLOCK-padded past the
+    prompt's last real block (those slices land in the null page).
+    ``true_len`` (traced ok) zeroes positions >= true_len first, so pages
+    never hold bucket-pad garbage — the paged analogue of
+    ``write_slot_prefix``'s stale-KV guard.
+    """
+    L, S, KH, D = k_new.shape
+    bs = pool.block_size
+    if S % bs:
+        raise ValueError(f"prefix length {S} not a multiple of "
+                         f"block_size {bs}")
+    nb = S // bs
+    if true_len is not None:
+        valid = jnp.arange(S) < true_len
+        mask = valid[None, :, None, None]
+        k_new = jnp.where(mask, k_new, jnp.zeros((), k_new.dtype))
+        v_new = jnp.where(mask, v_new, jnp.zeros((), v_new.dtype))
+    kb = k_new.reshape(L, nb, bs, KH, D).astype(pool.k.dtype)
+    vb = v_new.reshape(L, nb, bs, KH, D).astype(pool.v.dtype)
+    return PagedKVCache(pool.k.at[:, block_ids].set(kb),
+                        pool.v.at[:, block_ids].set(vb))
+
+
+def copy_block(pool: PagedKVCache, dst: jax.Array,
+               src: jax.Array) -> PagedKVCache:
+    """Copy-on-write: duplicate page ``src`` into page ``dst``."""
+    dst = jnp.asarray(dst, jnp.int32)
+    src = jnp.asarray(src, jnp.int32)
+    return PagedKVCache(pool.k.at[:, dst].set(pool.k[:, src]),
+                        pool.v.at[:, dst].set(pool.v[:, src]))

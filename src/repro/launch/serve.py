@@ -56,6 +56,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--prefill-buckets", default="auto", metavar="SPEC",
                     help="'auto' (default), 'none' (exact lengths), or a "
                          "comma-separated bucket list, e.g. '16,32,64'")
+    ap.add_argument("--kv-layout", default="slotted",
+                    choices=["slotted", "paged"],
+                    help="unique-KV layout: 'slotted' (per-slot max_seq "
+                         "slab) or 'paged' (block pool + block tables; "
+                         "bit-identical generations, less HBM)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV page (paged layout; must divide "
+                         "max-seq)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="fixed page-pool size (paged layout; default: "
+                         "grow on demand)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="dump the metrics registry (JSON; .lp/.txt for "
                          "line protocol) at exit")
@@ -77,7 +88,9 @@ def main(argv=None) -> dict:
         params = model.init(jax.random.PRNGKey(args.seed))
         eng = ServingEngine(cfg, params, EngineConfig(
             max_slots=args.slots, max_seq=args.max_seq, kernel=args.kernel,
-            donate_cache=not args.no_donate, prefill_buckets=buckets))
+            donate_cache=not args.no_donate, prefill_buckets=buckets,
+            kv_layout=args.kv_layout, block_size=args.block_size,
+            num_blocks=args.num_blocks))
 
     corpus = synthesize_corpus(CorpusSpec(
         "domain-0", args.corpus_tokens, cfg.vocab_size, seed=args.seed))
@@ -110,6 +123,9 @@ def main(argv=None) -> dict:
             int(reg.gauge("engine/prefill_compile_count").value),
         "decode_cache_bytes_copied":
             reg.gauge("engine/decode_cache_bytes_copied").value,
+        "kv_layout": args.kv_layout,
+        "hbm_high_water_bytes":
+            reg.gauge("engine/hbm_high_water_bytes").value,
         "wave": wave_stats(done),
     }
     print(json.dumps(summary, indent=1))

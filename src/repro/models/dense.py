@@ -24,8 +24,10 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import moska_attention as MA
 from repro.core import router as router_lib
+from repro.core import shared_attention as sa
 from repro.core.shared_kv import SharedKVStore
 from repro.kvcache.cache import KVCache, append_token, write_prefix
+from repro.kvcache.paged import PagedKVCache, append_layer, gather_layer
 from repro.models import layers as L
 from repro.models import moe as moe_lib
 from repro.sharding import lsc
@@ -129,7 +131,8 @@ def _layer_prefill(cfg: ModelConfig, x: jax.Array, lp: Params,
                    kc: jax.Array, vc: jax.Array,
                    shared: Optional[Tuple[jax.Array, jax.Array, jax.Array]],
                    q_offset: jax.Array,
-                   true_len: Optional[jax.Array] = None
+                   true_len: Optional[jax.Array] = None,
+                   layer_idx: Optional[jax.Array] = None
                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Prefill layer: causal attention + cache write + optional MoSKA path.
 
@@ -167,7 +170,7 @@ def _layer_prefill(cfg: ModelConfig, x: jax.Array, lp: Params,
         ctx = MA.MoskaLayerContext(sk, sv, routing)
         o = MA.moska_prefill_attention(
             q, k, v, ctx, cfg.moska, q_offset=q_offset,
-            window=cfg.attn_window, route_block=rb)
+            window=cfg.attn_window, route_block=rb, layer_idx=layer_idx)
     else:
         o = L.flash_attention(q, k, v, causal=True, q_offset=q_offset,
                               kv_offset=q_offset, window=cfg.attn_window)
@@ -182,7 +185,8 @@ def _layer_decode(cfg: ModelConfig, x: jax.Array, lp: Params,
                   positions: jax.Array,
                   kc: jax.Array, vc: jax.Array, lengths: jax.Array,
                   shared: Optional[Tuple[jax.Array, jax.Array, jax.Array]],
-                  kernel: Optional[str] = None
+                  kernel: Optional[str] = None,
+                  layer_idx: Optional[jax.Array] = None
                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Decode layer: one token per request.
 
@@ -206,12 +210,62 @@ def _layer_decode(cfg: ModelConfig, x: jax.Array, lp: Params,
         routing = router_lib.route(q, semb, cfg.moska.top_k_chunks)
         ctx = MA.MoskaLayerContext(sk, sv, routing)
     o = MA.moska_decode_attention(q, kc, vc, new_len, ctx, cfg.moska,
-                                  window=cfg.attn_window, kernel=kernel)
+                                  window=cfg.attn_window, kernel=kernel,
+                                  layer_idx=layer_idx)
     x = x + _attn_out_proj(o, lp)
     h2 = L.rms_norm(x, lp["ln2"]["scale"], cfg.rms_eps)
     y, _ = _ffn(cfg, lp, h2[:, None])
     x = x + y[:, 0]
     return x, kc, vc
+
+
+def _layer_decode_paged(cfg: ModelConfig, x: jax.Array, lp: Params,
+                        positions: jax.Array,
+                        kp: jax.Array, vp: jax.Array,
+                        table: jax.Array, lengths: jax.Array,
+                        shared: Optional[Tuple[jax.Array, jax.Array,
+                                               jax.Array]],
+                        kernel: Optional[str] = None,
+                        layer_idx: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Paged decode layer: identical math to ``_layer_decode`` but the
+    unique KV lives in a block pool.
+
+    kp/vp: (N, bs, KH, D) one layer's physical pages; table: (B, M) block
+    tables; lengths: (B,). The new token is scattered into its page, then
+    the tables gather a contiguous (B, M*bs, KH, D) view and the *same*
+    mixture attention runs on it — when ``M*bs == max_seq`` the attention
+    program is shape-identical to the slotted one and (because masked
+    positions get exactly-zero softmax weight) the outputs are bitwise
+    equal for live slots.
+    """
+    B, d = x.shape
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.rms_eps)
+    q, k, v = L.qkv_project(h[:, None], lp["attn"], cfg.num_heads,
+                            cfg.num_kv_heads, cfg.head_dim)
+    q = L.apply_rope(q, positions[:, None], cfg.rope_theta)[:, 0]  # (B,H,D)
+    k = L.apply_rope(k, positions[:, None], cfg.rope_theta)[:, 0]
+    v = v[:, 0]
+    q = lsc(q, "batch", "heads", None)
+    kp = append_layer(kp, k, table, lengths)
+    vp = append_layer(vp, v, table, lengths)
+    new_len = lengths + 1
+    kc = gather_layer(kp, table)                     # (B, M*bs, KH, D)
+    vc = gather_layer(vp, table)
+
+    ctx = None
+    if shared is not None and cfg.moska.enabled:
+        sk, sv, semb = _shared_layer(shared, x.dtype)
+        routing = router_lib.route(q, semb, cfg.moska.top_k_chunks)
+        ctx = MA.MoskaLayerContext(sk, sv, routing)
+    o = MA.moska_decode_attention(q, kc, vc, new_len, ctx, cfg.moska,
+                                  window=cfg.attn_window, kernel=kernel,
+                                  layer_idx=layer_idx)
+    x = x + _attn_out_proj(o, lp)
+    h2 = L.rms_norm(x, lp["ln2"]["scale"], cfg.rms_eps)
+    y, _ = _ffn(cfg, lp, h2[:, None])
+    x = x + y[:, 0]
+    return x, kp, vp
 
 
 # ---------------------------------------------------------------------------
@@ -345,17 +399,18 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
     def scan_body(x, xs):
         if shared is not None:
-            lp, kc, vc, sh = xs
+            lp, kc, vc, li, sh = xs
         else:
-            lp, kc, vc = xs
+            lp, kc, vc, li = xs
             sh = None
         x, kc, vc, _ = _layer_prefill(cfg, x, lp, positions, kc, vc, sh,
                                       jnp.asarray(start_pos),
-                                      true_len=true_len)
+                                      true_len=true_len, layer_idx=li)
         return x, (kc, vc)
 
-    xs = ((params["layers"], cache.k, cache.v) if shared is None else
-          (params["layers"], cache.k, cache.v, shared))
+    lidx = jnp.arange(cfg.num_layers)
+    xs = ((params["layers"], cache.k, cache.v, lidx) if shared is None else
+          (params["layers"], cache.k, cache.v, lidx, shared))
     x, (k_new, v_new) = jax.lax.scan(scan_body, x, xs)
     x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
     if true_len is None:
@@ -385,18 +440,174 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
     def scan_body(x, xs):
         if shared is not None:
-            lp, kc, vc, sh = xs
+            lp, kc, vc, li, sh = xs
         else:
-            lp, kc, vc = xs
+            lp, kc, vc, li = xs
             sh = None
         x, kc, vc = _layer_decode(cfg, x, lp, positions, kc, vc,
-                                  cache.length, sh, kernel=kernel)
+                                  cache.length, sh, kernel=kernel,
+                                  layer_idx=li)
         return x, (kc, vc)
 
-    xs = ((params["layers"], cache.k, cache.v) if shared is None else
-          (params["layers"], cache.k, cache.v, shared))
+    lidx = jnp.arange(cfg.num_layers)
+    xs = ((params["layers"], cache.k, cache.v, lidx) if shared is None else
+          (params["layers"], cache.k, cache.v, lidx, shared))
     x, (k_new, v_new) = jax.lax.scan(scan_body, x, xs)
     x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
     logits = jnp.einsum("bd,vd->bv", x, unembed_matrix(cfg, params),
                         preferred_element_type=jnp.float32)
     return logits, KVCache(k_new, v_new, cache.length + 1, cache.offset)
+
+
+def decode_step_paged(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                      pool: PagedKVCache, table: jax.Array,
+                      lengths: jax.Array, offsets: jax.Array,
+                      store: Optional[SharedKVStore] = None,
+                      kernel: Optional[str] = None
+                      ) -> Tuple[jax.Array, PagedKVCache]:
+    """One decode step over the paged unique-KV pool.
+
+    tokens: (B,); pool: physical pages (L, N, bs, KH, D); table: (B, M)
+    int32 block tables; lengths/offsets: (B,) — the host-side mirror of the
+    slotted cache's length/offset vectors (``SlotTables``). Returns
+    (logits (B, V), new pool). The caller advances lengths (``tick``).
+    """
+    x = params["embed"]["embed"][tokens]                     # (B, d)
+    x = lsc(x, "batch", None)
+    positions = offsets + lengths                            # absolute (RoPE)
+    shared = _shared_xs(cfg, store)
+
+    def scan_body(x, xs):
+        if shared is not None:
+            lp, kp, vp, li, sh = xs
+        else:
+            lp, kp, vp, li = xs
+            sh = None
+        x, kp, vp = _layer_decode_paged(cfg, x, lp, positions, kp, vp,
+                                        table, lengths, sh, kernel=kernel,
+                                        layer_idx=li)
+        return x, (kp, vp)
+
+    lidx = jnp.arange(cfg.num_layers)
+    xs = ((params["layers"], pool.k, pool.v, lidx) if shared is None else
+          (params["layers"], pool.k, pool.v, lidx, shared))
+    x, (k_new, v_new) = jax.lax.scan(scan_body, x, xs)
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+    logits = jnp.einsum("bd,vd->bv", x, unembed_matrix(cfg, params),
+                        preferred_element_type=jnp.float32)
+    return logits, PagedKVCache(k_new, v_new)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (long prompts, paged serving path)
+# ---------------------------------------------------------------------------
+
+def _layer_prefill_chunk(cfg: ModelConfig, x: jax.Array, lp: Params,
+                         positions: jax.Array,
+                         kc: jax.Array, vc: jax.Array,
+                         base: jax.Array, chunk_len: jax.Array,
+                         shared, start_pos: jax.Array,
+                         layer_idx: Optional[jax.Array] = None
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One chunk of a long prompt against the growing context view.
+
+    x: (B, C, d) chunk activations (right-padded; ``chunk_len`` real);
+    kc/vc: (B, V, KH, D) scratch context holding ``base`` earlier tokens;
+    the chunk's fresh keys are written at ``base`` and causal attention
+    runs over the whole view with ``kv_len = base + chunk_len`` masking.
+    """
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.rms_eps)
+    q, k, v = L.qkv_project(h, lp["attn"], cfg.num_heads, cfg.num_kv_heads,
+                            cfg.head_dim)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = lsc(q, "batch", "seq", "heads", None)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), base,
+                                             axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), base,
+                                             axis=1)
+    kv_valid = base + chunk_len
+
+    if shared is not None and cfg.moska.enabled:
+        sk, sv, semb = _shared_layer(shared, x.dtype)
+        B, C, H, D = q.shape
+        rb = min(128, C)
+        nb = C // rb
+        valid = (jnp.arange(C) < chunk_len).astype(q.dtype)        # (C,)
+        qs = (q * valid[None, :, None, None]).reshape(B, nb, rb, H, D)
+        cnt = jnp.maximum(valid.reshape(nb, rb).sum(axis=1), 1.0)
+        pooled = (jnp.sum(qs, axis=2) /
+                  cnt[None, :, None, None]).reshape(B * nb, H, D)
+        routing = router_lib.route(pooled, semb, cfg.moska.top_k_chunks)
+        o_u, lse_u = L.flash_attention(
+            q, kc, vc, causal=True, q_offset=start_pos + base,
+            kv_offset=start_pos, kv_len=kv_valid, window=cfg.attn_window,
+            return_lse=True)
+        part = sa.shared_attention_batched(
+            q.reshape(B * nb, rb, H, D), sk, sv, routing,
+            capacity_factor=cfg.moska.query_capacity_factor,
+            layer_idx=layer_idx)
+        o_s = part.out.reshape(B, C, H, D)
+        lse_s = part.lse.reshape(B, C, H)
+        o, _ = L.merge_partial_attention([o_u, o_s], [lse_u, lse_s])
+    else:
+        o = L.flash_attention(q, kc, vc, causal=True,
+                              q_offset=start_pos + base,
+                              kv_offset=start_pos, kv_len=kv_valid,
+                              window=cfg.attn_window)
+    x = x + lsc(_attn_out_proj(o, lp), "batch", "seq", None)
+    h2 = L.rms_norm(x, lp["ln2"]["scale"], cfg.rms_eps)
+    y, _ = _ffn(cfg, lp, h2)
+    x = x + lsc(y, "batch", "seq", None)
+    return x, kc, vc
+
+
+def prefill_chunk(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  cache: KVCache, store: Optional[SharedKVStore] = None,
+                  start_pos=0,
+                  chunk_len: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, KVCache]:
+    """Process one chunk of a long prompt; call repeatedly to prefill
+    prompts past the largest bucket with a bounded jit cache.
+
+    tokens: (B, C) the chunk, right-padded; ``chunk_len`` (traced scalar)
+    is the number of real tokens in it. ``cache`` is the scratch context
+    (L, B, V, KH, D) already holding ``cache.length`` earlier tokens.
+    Returns (logits at the chunk's last real token, cache extended by
+    ``chunk_len``). One compiled program per (C, V) shape pair regardless
+    of prompt length; numerically equivalent to the single-shot prefill
+    (allclose), not bitwise (different contraction shapes).
+    """
+    x = embed_inputs(cfg, params, tokens)
+    B, C, _ = x.shape
+    base = cache.length[0]
+    if chunk_len is None:
+        chunk_len = jnp.asarray(C, jnp.int32)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    start = jnp.asarray(start_pos, jnp.int32)
+    positions = start + base + jnp.arange(C)
+    shared = _shared_xs(cfg, store)
+
+    def scan_body(x, xs):
+        if shared is not None:
+            lp, kc, vc, li, sh = xs
+        else:
+            lp, kc, vc, li = xs
+            sh = None
+        x, kc, vc = _layer_prefill_chunk(cfg, x, lp, positions, kc, vc,
+                                         base, chunk_len, sh, start,
+                                         layer_idx=li)
+        return x, (kc, vc)
+
+    lidx = jnp.arange(cfg.num_layers)
+    xs = ((params["layers"], cache.k, cache.v, lidx) if shared is None else
+          (params["layers"], cache.k, cache.v, lidx, shared))
+    x, (k_new, v_new) = jax.lax.scan(scan_body, x, xs)
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+    x_last = jax.lax.dynamic_index_in_dim(x, chunk_len - 1, axis=1,
+                                          keepdims=False)
+    logits = jnp.einsum("bd,vd->bv", x_last, unembed_matrix(cfg, params),
+                        preferred_element_type=jnp.float32)
+    lengths = (cache.length + chunk_len).astype(jnp.int32)
+    offsets = jnp.full_like(cache.offset, start)
+    return logits, KVCache(k_new, v_new, lengths, offsets)

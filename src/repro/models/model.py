@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import (AUDIO, DENSE, HYBRID, MOE, SSM, VLM,
                                 ModelConfig)
 from repro.kvcache.cache import abstract_kv_cache, init_kv_cache
+from repro.kvcache.paged import init_paged_kv_cache
 
 
 class Model:
@@ -76,6 +77,36 @@ class Model:
         return self._impl.decode_step(self.cfg, params, tokens, cache,
                                       store=store, positions=positions,
                                       kernel=kernel)
+
+    # -- paged KV layout (dense-family only) ---------------------------
+    def _require_paged(self, what: str):
+        if self.cfg.family not in (DENSE, VLM, MOE):
+            raise NotImplementedError(
+                f"{what} requires the paged KV layout, which only the "
+                f"dense-family caches support (family={self.cfg.family!r}; "
+                "use kv_layout='slotted')")
+
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         dtype=jnp.bfloat16):
+        self._require_paged("init_paged_cache")
+        cfg = self.cfg
+        return init_paged_kv_cache(cfg.num_layers, num_blocks, block_size,
+                                   cfg.num_kv_heads, cfg.head_dim, dtype)
+
+    def decode_step_paged(self, params, tokens, pool, table, lengths,
+                          offsets, store=None,
+                          kernel: Optional[str] = None):
+        self._require_paged("decode_step_paged")
+        return self._impl.decode_step_paged(self.cfg, params, tokens, pool,
+                                            table, lengths, offsets,
+                                            store=store, kernel=kernel)
+
+    def prefill_chunk(self, params, tokens, cache, store=None,
+                      start_pos=0, chunk_len=None):
+        self._require_paged("prefill_chunk")
+        return self._impl.prefill_chunk(self.cfg, params, tokens, cache,
+                                        store=store, start_pos=start_pos,
+                                        chunk_len=chunk_len)
 
 
 def build_model(cfg: ModelConfig) -> Model:

@@ -16,6 +16,6 @@ from repro.obs.metrics import (  # noqa: F401
     COUNT_EDGES, FRACTION_EDGES, LATENCY_EDGES_S,
     Counter, Gauge, Histogram, MetricsRegistry,
     enable_jit_metrics, get_registry, jit_gauge, jit_inc, jit_observe,
-    reset_registry, set_registry,
+    jit_observe_per, reset_registry, set_registry,
 )
 from repro.obs.trace import Span, current_span, span  # noqa: F401

@@ -257,9 +257,13 @@ def _cb_observe(name, edges, v):
     get_registry().observe(name, float(v), edges)
 
 
-def _callback(fn, value) -> None:
+def _cb_observe_per(prefix, edges, label, v):
+    get_registry().observe(f"{prefix}/L{int(label)}", float(v), edges)
+
+
+def _callback(fn, *values) -> None:
     import jax
-    jax.debug.callback(fn, value)
+    jax.debug.callback(fn, *values)
 
 
 def jit_inc(name: str, value) -> None:
@@ -281,3 +285,16 @@ def jit_observe(name: str, value,
     if JIT_METRICS:
         import functools
         _callback(functools.partial(_cb_observe, name, tuple(edges)), value)
+
+
+def jit_observe_per(prefix: str, label, value,
+                    edges: Sequence[Number] = DEFAULT_EDGES) -> None:
+    """Histogram observation under a runtime-labeled name
+    (``{prefix}/L{label}``). Metric names are static strings, but inside a
+    ``lax.scan`` over layers the layer index is a traced value — so the
+    label rides to the host as a callback operand and the name is formed
+    there. Used for the per-layer dispatch histograms."""
+    if JIT_METRICS:
+        import functools
+        _callback(functools.partial(_cb_observe_per, prefix, tuple(edges)),
+                  label, value)

@@ -29,9 +29,21 @@ prompt length; pad positions are excluded from routing and logits so the
 bucketed program computes exactly what the exact-length program would.
 ``run()`` may be called repeatedly on one engine; finished slots are
 rewritten (and their tails zeroed) on re-admission.
+
+Paged KV layout (``EngineConfig(kv_layout="paged")``): instead of the
+per-slot ``max_seq`` slab, unique KV lives in a pool of ``block_size``-token
+pages mapped through per-slot block tables (``repro.kvcache``). Admission
+allocates only the prompt's blocks, decode appends pages on demand, and
+identical prompts over one corpus share pages copy-on-write — so the same
+``mem_budget_bytes`` admits more concurrent requests. Generations are
+bit-identical to the slotted layout (the gather view tiles ``max_seq``
+exactly and masked positions carry exactly-zero probability). Prompts
+longer than ``max_seq`` are served via chunked prefill
+(``prefill_chunk``-token pieces against a growing scratch context).
 """
 from __future__ import annotations
 
+import collections
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
@@ -44,7 +56,12 @@ from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.scheduler import Request, Scheduler, SchedulerConfig
 from repro.core.shared_kv import SharedKVStore, build_store
+from repro.kvcache.block_table import (SlotTables, blocks_for,
+                                       validate_block_size)
 from repro.kvcache.cache import KVCache, write_slot_prefix
+from repro.kvcache.paged import (BlockPool, PagedKVCache, PoolExhausted,
+                                 copy_block, grow_paged_kv_cache,
+                                 write_blocks)
 from repro.models.model import Model, build_model
 
 #: smallest prefill bucket; "auto" buckets are powers of two from here up
@@ -118,6 +135,22 @@ class EngineConfig:
     donate_cache: bool = True
     # "auto" | None (exact lengths) | explicit bucket sequence
     prefill_buckets: Union[str, Sequence[int], None] = "auto"
+    # -- paged KV layout ------------------------------------------------
+    # "slotted": one (L, B, max_seq, KH, D) slab, every slot pays max_seq.
+    # "paged": block-pool unique KV with per-slot block tables
+    # (dense-family caches only); bit-identical generations, less HBM.
+    kv_layout: str = "slotted"
+    block_size: int = 16        # tokens per page; must divide max_seq
+    # fixed pool size in blocks (incl. the reserved null block); None =
+    # start small and grow on demand (hbm_high_water_bytes tracks demand)
+    num_blocks: Optional[int] = None
+    # chunk length for prompts past max_seq (multiple of 128 keeps the
+    # shared-attention route blocks aligned with the single-shot prefill)
+    prefill_chunk: int = 128
+    # cache completed prompts' pages and remap them (copy-on-write) into
+    # later requests with an identical (corpus, prompt); LRU-evicted
+    # under pool pressure
+    share_prefix_blocks: bool = True
 
 
 class ServingEngine:
@@ -131,7 +164,10 @@ class ServingEngine:
             max_slots=engine_cfg.max_slots,
             mem_budget_bytes=engine_cfg.mem_budget_bytes,
             unique_bytes_per_token=cfg.kv_bytes_per_token,
-            max_seq=engine_cfg.max_seq))
+            max_seq=engine_cfg.max_seq,
+            kv_layout=engine_cfg.kv_layout,
+            block_size=engine_cfg.block_size))
+        self.scheduler.set_store_evictor(self._on_store_evicted)
         if engine_cfg.jit_metrics:
             obs.enable_jit_metrics(True)
         donate = engine_cfg.donate_cache
@@ -142,12 +178,56 @@ class ServingEngine:
                                 static_argnames=("use_store",))
         self._write_slot = jax.jit(self._write_slot_impl,
                                    donate_argnums=(0,) if donate else ())
+        self._write_slot_pytree = jax.jit(
+            self._write_slot_pytree_impl,
+            donate_argnums=(0,) if donate else ())
         self._buckets = resolve_prefill_buckets(engine_cfg.prefill_buckets,
                                                 engine_cfg.max_seq)
         self._prefill_keys: set = set()
         self._cache = None          # persistent (L, B, S, KH, D) batch cache
+        # corpus token ids kept host-side so evicted stores can be rebuilt
+        self._corpus_tokens: Dict[str, np.ndarray] = {}
+        self._hbm_high_water = 0.0
+        if engine_cfg.kv_layout == "paged":
+            self._init_paged_state()
+        elif engine_cfg.kv_layout != "slotted":
+            raise ValueError(
+                f"unknown kv_layout {engine_cfg.kv_layout!r} "
+                "(expected 'slotted' or 'paged')")
         self.metrics = {"decode_steps": 0, "prefills": 0,
                         "tokens_generated": 0, "wall_s": 0.0}
+
+    def _init_paged_state(self):
+        ecfg = self.ecfg
+        self.model._require_paged("kv_layout='paged'")
+        validate_block_size(ecfg.block_size, ecfg.max_seq)
+        if ecfg.prefill_chunk % ecfg.block_size:
+            raise ValueError(
+                f"prefill_chunk {ecfg.prefill_chunk} must be a multiple "
+                f"of block_size {ecfg.block_size}")
+        if ecfg.prefill_chunk > 128 and ecfg.prefill_chunk % 128:
+            raise ValueError(
+                f"prefill_chunk {ecfg.prefill_chunk} > 128 must be a "
+                "multiple of 128 (shared-attention route-block size)")
+        m0 = ecfg.max_seq // ecfg.block_size
+        # pool growth quantum: one slotted slot's worth of pages, so the
+        # decode program recompiles O(total/max_seq) times, not per request
+        self._pool_quantum = m0
+        cap = ecfg.num_blocks if ecfg.num_blocks is not None else 1 + m0
+        self._block_pool = BlockPool(cap)
+        self._tables = SlotTables(ecfg.max_slots, m0, ecfg.block_size)
+        self._pool: Optional[PagedKVCache] = None   # device pages, lazy
+        # (corpus_id, prompt tuple) -> {"blocks": [...], "first": tok}, LRU
+        self._prefix_cache: "collections.OrderedDict" = \
+            collections.OrderedDict()
+        donate = ecfg.donate_cache
+        self._decode_paged = jax.jit(self._decode_paged_impl,
+                                     static_argnames=("use_store",),
+                                     donate_argnums=(2,) if donate else ())
+        self._prefill_chunked = jax.jit(self._prefill_chunk_impl,
+                                        static_argnames=("use_store",))
+        self._write_blocks = jax.jit(self._write_blocks_impl,
+                                     donate_argnums=(0,) if donate else ())
 
     @property
     def registry(self) -> obs.MetricsRegistry:
@@ -164,24 +244,59 @@ class ServingEngine:
         n = (len(tokens) // C) * C
         if n == 0:
             raise ValueError("corpus shorter than one chunk")
-        with obs.span("engine.register_corpus", corpus_id=corpus_id,
-                      tokens=n):
-            toks = jnp.asarray(tokens[:n], jnp.int32)[None]
-            cache = self.model.init_cache(1, n, self.ecfg.cache_dtype)
-            _, cache = self.model.prefill(self.params, toks, cache)
-            store = build_store(jax.block_until_ready(cache.k)[:, 0],
-                                cache.v[:, 0], C)
+        toks = np.asarray(tokens[:n], np.int32)
+        store = self._build_store(corpus_id, toks)
         self.stores[corpus_id] = store
+        self._corpus_tokens[corpus_id] = toks
+        self.scheduler.register_store(corpus_id, _pytree_nbytes(store))
         reg = self.registry
         reg.inc("engine/corpora_registered")
         reg.inc("engine/corpus_tokens_prefilled", n)
         reg.set_gauge(f"engine/corpus/{corpus_id}/chunks", store.num_chunks)
         return store.num_chunks
 
+    def _build_store(self, corpus_id: str, toks: np.ndarray) -> SharedKVStore:
+        C = self.cfg.moska.chunk_size
+        with obs.span("engine.register_corpus", corpus_id=corpus_id,
+                      tokens=len(toks)):
+            cache = self.model.init_cache(1, len(toks), self.ecfg.cache_dtype)
+            _, cache = self.model.prefill(self.params,
+                                          jnp.asarray(toks)[None], cache)
+            return build_store(jax.block_until_ready(cache.k)[:, 0],
+                               cache.v[:, 0], C)
+
+    def _on_store_evicted(self, corpus_id: str) -> None:
+        """Scheduler LRU eviction callback: drop the store's device arrays
+        (the host token ids are kept, so it can be rebuilt on demand)."""
+        self.stores.pop(corpus_id, None)
+        self.registry.inc("kvcache/stores_dropped")
+
+    def _get_store(self, corpus_id: Optional[str]) -> Optional[SharedKVStore]:
+        """The corpus' device store, rebuilding it if the scheduler evicted
+        it for memory; touches its LRU clock."""
+        if corpus_id is None:
+            return None
+        store = self.stores.get(corpus_id)
+        if store is None:
+            if corpus_id not in self._corpus_tokens:
+                raise KeyError(f"corpus {corpus_id!r} not registered")
+            store = self._build_store(corpus_id,
+                                      self._corpus_tokens[corpus_id])
+            self.stores[corpus_id] = store
+            self.scheduler.mark_store_loaded(corpus_id)
+            # rebalance: reloading may push colder stores out
+            self.scheduler._evict_stores_for(0.0, keep=corpus_id)
+            self.registry.inc("kvcache/store_reloads")
+        self.scheduler.touch_store(corpus_id)
+        return store
+
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
                corpus_id: Optional[str] = None) -> int:
-        if corpus_id is not None and corpus_id not in self.stores:
+        # registration outlives device residency: an LRU-evicted store is
+        # rebuilt from its kept tokens when the corpus becomes resident
+        if corpus_id is not None and corpus_id not in self._corpus_tokens \
+                and corpus_id not in self.stores:
             raise KeyError(f"corpus {corpus_id!r} not registered")
         return self.scheduler.submit(prompt, max_new_tokens, corpus_id)
 
@@ -209,9 +324,54 @@ class ServingEngine:
     def _write_slot_impl(self, cache, slot_cache, slot, true_len):
         return write_slot_prefix(cache, slot_cache, slot, true_len)
 
+    def _write_slot_pytree_impl(self, cache, slot_cache, slot):
+        """Slot-granular write for non-KVCache cache families (ssm/hybrid
+        state pytrees): each (L, 1, S, ...) leaf lands at batch slot
+        ``slot`` via dynamic_update_slice — donated, so the batch pytree is
+        mutated in place instead of the legacy full-copy merge."""
+        def merge(dst, src):
+            if dst.ndim == 1:                    # (B,) lengths / offsets
+                return dst.at[slot].set(src[0].astype(dst.dtype))
+            start = (0, slot) + (0,) * (dst.ndim - 2)
+            return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                                start)
+        return jax.tree.map(merge, cache, slot_cache)
+
+    def _decode_paged_impl(self, params, tokens, pool, table, lengths,
+                           offsets, store, use_store: bool):
+        logits, pool = self.model.decode_step_paged(
+            params, tokens, pool, table, lengths, offsets,
+            store=store if use_store else None, kernel=self.ecfg.kernel)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, pool
+
+    def _prefill_chunk_impl(self, params, tokens, ctx, start, chunk_len,
+                            store, use_store: bool):
+        """One fixed-size chunk of a long prompt against the growing
+        scratch context ``ctx``; returns (last-real-token argmax, ctx)."""
+        logits, ctx = self.model.prefill_chunk(
+            params, tokens, ctx, store=store if use_store else None,
+            start_pos=start, chunk_len=chunk_len)
+        first = jnp.argmax(logits[0]).astype(jnp.int32)
+        return first, ctx
+
+    def _write_blocks_impl(self, pool, block_ids, slot_k, slot_v, true_len):
+        """Scatter a (possibly bucket-padded) 1-batch prefill cache into
+        the pool pages ``block_ids``; pads/slices the prefix to exactly
+        tile the blocks (positions >= true_len are zeroed either way)."""
+        k, v = slot_k[:, 0], slot_v[:, 0]        # (L, S, KH, D)
+        V = block_ids.shape[0] * pool.block_size
+        S = k.shape[1]
+        if S > V:
+            k, v = k[:, :V], v[:, :V]
+        elif S < V:
+            pad = jnp.zeros((k.shape[0], V - S) + k.shape[2:], k.dtype)
+            k = jnp.concatenate([k, pad], axis=1)
+            v = jnp.concatenate([v, pad.astype(v.dtype)], axis=1)
+        return write_blocks(pool, block_ids, k, v, true_len)
+
     def _active_store(self) -> Optional[SharedKVStore]:
-        cid = self.scheduler.resident_corpus
-        return self.stores.get(cid) if cid is not None else None
+        return self._get_store(self.scheduler.resident_corpus)
 
     # ------------------------------------------------------------------
     def _ensure_cache(self):
@@ -234,19 +394,32 @@ class ServingEngine:
         self.registry.set_gauge("engine/decode_cache_bytes", nbytes)
         return cache
 
+    def _note_hbm(self, kv_nbytes: float) -> None:
+        """Track the peak of (unique KV + loaded shared stores) device
+        bytes — the number the paged layout exists to shrink."""
+        total = kv_nbytes + self.scheduler.shared_bytes
+        if total > self._hbm_high_water:
+            self._hbm_high_water = total
+        self.registry.set_gauge("engine/hbm_high_water_bytes",
+                                self._hbm_high_water)
+
     def run(self, max_waves: int = 10**9) -> List[Request]:
         """Drive to completion (or max_waves); returns finished requests.
 
-        May be called repeatedly: the batch cache stays resident on device
-        between calls. Raises RuntimeError on a livelocked configuration
-        (queued work that can never be admitted under mem_budget_bytes).
+        May be called repeatedly: the batch cache (slotted) / block pool
+        (paged) stays resident on device between calls. Raises
+        RuntimeError on a livelocked configuration (queued work that can
+        never be admitted under mem_budget_bytes).
         """
+        if self.ecfg.kv_layout == "paged":
+            return self._run_paged(max_waves)
         B = self.ecfg.max_slots
         reg = self.registry
         t0 = time.perf_counter()
         tok0 = self.metrics["tokens_generated"]
         cache = self._ensure_cache()
         self._cache = None      # run() holds the only live reference
+        cache_nbytes = _pytree_nbytes(cache)
         slot_tokens = np.zeros((B,), np.int32)
 
         waves = 0
@@ -284,6 +457,7 @@ class ServingEngine:
                         continue
                     store = self._active_store()
                     use_store = store is not None and self.cfg.moska.enabled
+                    self._note_hbm(cache_nbytes)
                     # batch density: fraction of the static wave the decode
                     # step spends on live requests (the N of the GEMM)
                     reg.observe("engine/wave_batch_density",
@@ -318,11 +492,285 @@ class ServingEngine:
                       if wall > 0 else 0.0)
         return self.scheduler.finished
 
+    # -- paged KV layout ------------------------------------------------
+    def _ensure_pool(self) -> PagedKVCache:
+        """The persistent device block pool (paged analogue of
+        ``_ensure_cache``)."""
+        pool = self._pool
+        if pool is not None:
+            leaves = jax.tree.leaves(pool)
+            if any(getattr(l, "is_deleted", lambda: False)() for l in leaves):
+                pool = None
+        if pool is None:
+            pool = self.model.init_paged_cache(self._block_pool.num_blocks,
+                                               self.ecfg.block_size,
+                                               self.ecfg.cache_dtype)
+        self.registry.set_gauge("engine/decode_cache_bytes", pool.nbytes)
+        self.registry.set_gauge(
+            "engine/decode_cache_bytes_copied",
+            0 if self.ecfg.donate_cache else pool.nbytes)
+        return pool
+
+    def _evict_prefix_entries(self, need_blocks: int) -> int:
+        """Drop LRU prefix-cache entries until ``need_blocks`` pages were
+        actually released (or the cache is empty); returns #released."""
+        reg = self.registry
+        released = 0
+        while self._prefix_cache and released < need_blocks:
+            _, entry = self._prefix_cache.popitem(last=False)
+            released += self._block_pool.free(entry["blocks"])
+            reg.inc("kvcache/prefix_evictions")
+        if released:
+            reg.inc("kvcache/blocks_evicted", released)
+        return released
+
+    def _alloc_blocks(self, pool: PagedKVCache, n: int,
+                      reserve: int = 0) -> Tuple[PagedKVCache, List[int]]:
+        """Allocate ``n`` pages, evicting cold prefix entries and (in
+        auto-sized mode) growing the device pool when the free list is
+        short. ``reserve`` pages beyond ``n`` size the growth so a
+        request's decode appends don't retrigger it."""
+        bp = self._block_pool
+        want = n + reserve
+        if bp.available < want:
+            self._evict_prefix_entries(want - bp.available)
+        if bp.available < want and self.ecfg.num_blocks is None:
+            q = self._pool_quantum
+            shortfall = want - bp.available
+            new_cap = bp.num_blocks + -(-shortfall // q) * q
+            pool = grow_paged_kv_cache(pool, new_cap)
+            bp.grow(new_cap)
+            self.registry.inc("kvcache/pool_growths")
+        return pool, bp.alloc(n)     # PoolExhausted if still short of n
+
+    def _record_block_gauges(self) -> None:
+        bp = self._block_pool
+        reg = self.registry
+        reg.set_gauge("kvcache/blocks_in_use", bp.in_use)
+        reg.set_gauge("kvcache/blocks_free", bp.available)
+        reg.set_gauge("kvcache/block_capacity", bp.capacity)
+        reg.set_gauge("kvcache/block_utilization",
+                      bp.in_use / max(bp.capacity, 1))
+
+    def _prefill_slot_paged(self, pool: PagedKVCache, req: Request
+                            ) -> Tuple[PagedKVCache, int]:
+        """Admit one request into the paged pool: prefix-cache hit remaps
+        shared pages; in-bucket prompts reuse the bucketed jit'd prefill
+        (bit-identical to slotted) + a block scatter; prompts past max_seq
+        go through chunked prefill."""
+        reg = self.registry
+        bs = self.ecfg.block_size
+        true_len = len(req.prompt)
+        total_blocks = blocks_for(true_len + req.max_new_tokens, bs)
+        if total_blocks > self._tables.blocks_per_slot:
+            self._tables.grow(total_blocks)   # wider gather view; recompile
+        store = self._get_store(req.corpus_id)
+        start = store.total_tokens if store is not None else 0
+        use_store = store is not None and self.cfg.moska.enabled
+
+        key = (req.corpus_id, tuple(req.prompt))
+        entry = (self._prefix_cache.get(key)
+                 if self.ecfg.share_prefix_blocks else None)
+        if entry is not None:
+            self._prefix_cache.move_to_end(key)
+            self._block_pool.incref(entry["blocks"])
+            self._tables.assign(req.slot, entry["blocks"], true_len, start)
+            reg.inc("kvcache/prefix_hits")
+            reg.inc("kvcache/blocks_shared", len(entry["blocks"]))
+            return pool, int(entry["first"])
+
+        nb = blocks_for(true_len, bs)
+        pool, ids = self._alloc_blocks(pool, nb, reserve=total_blocks - nb)
+        if true_len <= self.ecfg.max_seq:
+            pad_len = bucket_for(self._buckets, true_len)
+            padded = np.zeros((1, pad_len), np.int32)
+            padded[0, :true_len] = req.prompt
+            pkey = (pad_len, use_store,
+                    tuple(store.k.shape) if use_store else None)
+            if pkey not in self._prefill_keys:
+                self._prefill_keys.add(pkey)
+                reg.set_gauge("engine/prefill_compile_count",
+                              len(self._prefill_keys))
+            first, slot_cache = self._prefill(
+                self.params, jnp.asarray(padded),
+                jnp.asarray(true_len, jnp.int32),
+                jnp.asarray(start, jnp.int32), store, use_store)
+        else:
+            first, slot_cache = self._prefill_chunked_prompt(
+                req, store, use_store, start)
+        pool = self._write_blocks(pool, jnp.asarray(ids, jnp.int32),
+                                  slot_cache.k, slot_cache.v,
+                                  jnp.asarray(true_len, jnp.int32))
+        self._tables.assign(req.slot, ids, true_len, start)
+        self.metrics["prefills"] += 1
+        reg.inc("engine/prefills")
+        return pool, int(first)
+
+    def _prefill_chunked_prompt(self, req: Request, store, use_store: bool,
+                                start: int):
+        """Long-prompt prefill in ``prefill_chunk``-token pieces against a
+        growing scratch context (one compiled program per (chunk, context)
+        shape pair, bounded regardless of prompt length)."""
+        C = self.ecfg.prefill_chunk
+        true_len = len(req.prompt)
+        v_tot = blocks_for(true_len, C) * C
+        ctx = self.model.init_cache(1, v_tot, self.ecfg.cache_dtype)
+        pkey = ("chunk", C, v_tot, use_store,
+                tuple(store.k.shape) if use_store else None)
+        if pkey not in self._prefill_keys:
+            self._prefill_keys.add(pkey)
+            self.registry.set_gauge("engine/prefill_compile_count",
+                                    len(self._prefill_keys))
+        first = None
+        for s0 in range(0, true_len, C):
+            clen = min(C, true_len - s0)
+            chunk = np.zeros((1, C), np.int32)
+            chunk[0, :clen] = req.prompt[s0:s0 + clen]
+            first, ctx = self._prefill_chunked(
+                self.params, jnp.asarray(chunk), ctx,
+                jnp.asarray(start, jnp.int32), jnp.asarray(clen, jnp.int32),
+                store, use_store)
+            self.registry.inc("engine/prefill_chunks")
+        self.registry.inc("engine/chunked_prefills")
+        return first, ctx
+
+    def _prepare_wave_blocks(self, pool: PagedKVCache,
+                             active: List[Request]) -> PagedKVCache:
+        """Pre-wave page maintenance: every active slot is about to append
+        one token at its current length — make sure the target page exists
+        and is exclusively owned (copy-on-write for prefix-shared pages)."""
+        tables = self._tables
+        bp = self._block_pool
+        reg = self.registry
+        for req in active:
+            slot = req.slot
+            bi = int(tables.length[slot]) // self.ecfg.block_size
+            if bi >= int(tables.n_blocks[slot]):
+                if bi >= tables.blocks_per_slot:
+                    tables.grow(bi + 1)
+                pool, ids = self._alloc_blocks(pool, 1)
+                tables.append_block(slot, ids[0])
+                reg.inc("kvcache/blocks_appended")
+            else:
+                blk = int(tables.table[slot, bi])
+                if bp.needs_copy(blk):
+                    pool, ids = self._alloc_blocks(pool, 1)
+                    pool = copy_block(pool, ids[0], blk)
+                    tables.replace_block(slot, bi, ids[0])
+                    bp.free([blk])
+                    reg.inc("kvcache/cow_copies")
+        return pool
+
+    def _release_slot_paged(self, req: Request, slot: int) -> None:
+        """Free a finished request's pages; with prefix sharing on, its
+        prompt pages (incl. the partial tail — later writers CoW it) are
+        parked in the LRU prefix cache keyed by (corpus, prompt)."""
+        tables = self._tables
+        key = (req.corpus_id, tuple(req.prompt))
+        if self.ecfg.share_prefix_blocks and req.generated and \
+                key not in self._prefix_cache:
+            npb = blocks_for(len(req.prompt), self.ecfg.block_size)
+            pblocks = tables.slot_blocks(slot)[:npb]
+            if len(pblocks) == npb:
+                self._block_pool.incref(pblocks)
+                self._prefix_cache[key] = {"blocks": pblocks,
+                                           "first": req.generated[0]}
+        self._block_pool.free(tables.clear(slot))
+        self.registry.inc("kvcache/slots_released")
+
+    def _run_paged(self, max_waves: int) -> List[Request]:
+        B = self.ecfg.max_slots
+        reg = self.registry
+        t0 = time.perf_counter()
+        tok0 = self.metrics["tokens_generated"]
+        pool = self._ensure_pool()
+        self._pool = None       # run() holds the only live reference
+        slot_tokens = np.zeros((B,), np.int32)
+
+        waves = 0
+        try:
+            with obs.span("engine.run"):
+                while not self.scheduler.idle and waves < max_waves:
+                    admitted = self.scheduler.schedule()
+                    for req in admitted:
+                        tp = time.perf_counter()
+                        slot = req.slot
+                        pool, first = self._prefill_slot_paged(pool, req)
+                        reg.observe("engine/prefill_latency_s",
+                                    time.perf_counter() - tp,
+                                    obs.LATENCY_EDGES_S)
+                        slot_tokens[slot] = first
+                        self.scheduler.record_token(req, int(first),
+                                                    self.ecfg.eos_id)
+                        if req.done:
+                            self._release_slot_paged(req, slot)
+                        self.metrics["tokens_generated"] += 1
+                        reg.inc("engine/tokens_generated")
+                    active = self.scheduler.active()
+                    if not active:
+                        if not admitted and not self.scheduler.idle:
+                            head = self.scheduler.queue[0]
+                            raise RuntimeError(
+                                "serving livelock: "
+                                f"{len(self.scheduler.queue)} queued "
+                                "request(s) but none admissible — "
+                                f"mem_budget_bytes="
+                                f"{self.ecfg.mem_budget_bytes:.3g} is below "
+                                "the head request's block cost "
+                                f"({self.scheduler._request_cost(head):.3g} "
+                                "bytes + resident shared stores)")
+                        waves += 1
+                        continue
+                    store = self._active_store()
+                    use_store = store is not None and self.cfg.moska.enabled
+                    pool = self._prepare_wave_blocks(pool, active)
+                    self._note_hbm(pool.nbytes)
+                    self._record_block_gauges()
+                    reg.observe("engine/wave_batch_density",
+                                len(active) / B, obs.FRACTION_EDGES)
+                    reg.observe("engine/wave_active_slots", len(active),
+                                obs.COUNT_EDGES)
+                    tbl, lens, offs = self._tables.device_args()
+                    td = time.perf_counter()
+                    nxt, pool = self._decode_paged(
+                        self.params, jnp.asarray(slot_tokens), pool,
+                        jnp.asarray(tbl), jnp.asarray(lens),
+                        jnp.asarray(offs), store, use_store)
+                    nxt = np.asarray(nxt)  # device sync
+                    reg.observe("engine/decode_step_latency_s",
+                                time.perf_counter() - td,
+                                obs.LATENCY_EDGES_S)
+                    self._tables.tick()
+                    for req in list(active):
+                        tok = int(nxt[req.slot])
+                        slot = req.slot
+                        slot_tokens[slot] = tok
+                        self.scheduler.record_token(req, tok,
+                                                    self.ecfg.eos_id)
+                        if req.done:
+                            self._release_slot_paged(req, slot)
+                        self.metrics["tokens_generated"] += 1
+                        reg.inc("engine/tokens_generated")
+                        reg.inc("engine/decoded_tokens")
+                    self.metrics["decode_steps"] += 1
+                    reg.inc("engine/decode_steps")
+                    waves += 1
+        finally:
+            self._pool = pool
+        self._record_block_gauges()
+        wall = time.perf_counter() - t0
+        self.metrics["wall_s"] += wall
+        reg.set_gauge("engine/last_run_wall_s", wall)
+        reg.set_gauge("engine/last_run_tokens_per_s",
+                      (self.metrics["tokens_generated"] - tok0) / wall
+                      if wall > 0 else 0.0)
+        return self.scheduler.finished
+
     # ------------------------------------------------------------------
     def _prefill_slot(self, cache, req: Request):
         """Prefill one slot: bucket-padded jit'd prefill + in-place per-slot
         write into the (donated) batch cache."""
-        store = self.stores.get(req.corpus_id)
+        store = self._get_store(req.corpus_id)
         if not isinstance(cache, KVCache):
             # non-KVCache families (ssm/hybrid/encdec states): legacy
             # full-merge path, exact lengths
@@ -360,13 +808,19 @@ class ServingEngine:
         self.metrics["prefills"] += 1
         self.registry.inc("engine/prefills")
         first = int(np.argmax(np.asarray(logits)[0]))
-        cache = _merge_slot_cache(cache, slot_cache, req.slot)
+        cache = self._write_slot_pytree(cache, slot_cache,
+                                        jnp.asarray(req.slot, jnp.int32))
         return cache, first
+
+
+def _pytree_nbytes(tree) -> int:
+    return sum(getattr(l, "nbytes", 0) for l in jax.tree.leaves(tree))
 
 
 def _merge_slot_cache(cache, slot_cache, slot: int):
     """Copy a 1-batch cache pytree into batch slot ``slot`` (full-copy
-    reference path; the KVCache hot path uses ``write_slot_prefix``)."""
+    reference path; the jit'd hot paths use ``write_slot_prefix`` /
+    ``_write_slot_pytree``; kept as the differential-test oracle)."""
     def merge(dst, src):
         if dst.ndim == 1:          # (B,) lengths / offsets
             return dst.at[slot].set(src[0])

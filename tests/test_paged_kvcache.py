@@ -1,0 +1,224 @@
+"""Paged KV-cache subsystem unit/property tests.
+
+BlockPool invariants under arbitrary alloc/incref/free interleavings
+(hypothesis when installed; deterministic fallbacks always run):
+  * no double-allocation — a live block never reappears in the free list
+  * conservation — free + live == capacity after every operation
+  * refcounts never drop below 1 while live; double free raises
+
+Device ops: write_blocks/gather_layer round-trip is exactly the slotted
+cache contents; append_layer lands tokens at (table[b, len//bs], len%bs);
+copy_block duplicates a page bit-for-bit; NULL-page garbage lanes never
+touch live pages.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kvcache.block_table import (NULL_BLOCK, SlotTables, blocks_for,
+                                       validate_block_size)
+from repro.kvcache.paged import (BlockPool, PoolExhausted, append_layer,
+                                 copy_block, gather_layer,
+                                 grow_paged_kv_cache, init_paged_kv_cache,
+                                 write_blocks)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed "
+    "(pip install -r requirements-dev.txt)")
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def _random_walk(pool: BlockPool, rng, steps: int):
+    """alloc/incref/free walk mirroring engine usage; invariants checked
+    after every operation."""
+    tables = []            # simulated block tables: lists of live ids
+    for _ in range(steps):
+        op = rng.integers(0, 4)
+        if op == 0:                                    # admit
+            n = int(rng.integers(1, 4))
+            try:
+                ids = pool.alloc(n)
+            except PoolExhausted:
+                assert pool.available < n
+            else:
+                tables.append(ids)
+        elif op == 1 and tables:                       # prefix share
+            src = tables[rng.integers(0, len(tables))]
+            pool.incref(src)
+            tables.append(list(src))
+        elif op == 2 and tables:                       # release
+            t = tables.pop(rng.integers(0, len(tables)))
+            pool.free(t)
+        elif op == 3 and tables:                       # CoW one block
+            t = tables[rng.integers(0, len(tables))]
+            bi = rng.integers(0, len(t))
+            if pool.needs_copy(t[bi]):
+                try:
+                    new = pool.alloc(1)[0]
+                except PoolExhausted:
+                    continue
+                pool.free([t[bi]])
+                t[bi] = new
+        pool.check_invariants()
+    for t in tables:
+        pool.free(t)
+    pool.check_invariants()
+    assert pool.in_use == 0 and pool.available == pool.capacity
+
+
+def test_block_pool_deterministic_walk():
+    _random_walk(BlockPool(16), np.random.default_rng(0), 300)
+
+
+def test_block_pool_small_pool_walk():
+    _random_walk(BlockPool(3), np.random.default_rng(1), 200)
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @given(st.integers(2, 32), st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_block_pool_property_walk(num_blocks, seed):
+        _random_walk(BlockPool(num_blocks), np.random.default_rng(seed), 150)
+
+
+def test_block_pool_basics():
+    pool = BlockPool(8)
+    assert pool.capacity == 7
+    ids = pool.alloc(3)
+    assert NULL_BLOCK not in ids and len(set(ids)) == 3
+    assert pool.in_use == 3 and pool.available == 4
+    # exhaustion allocates nothing
+    with pytest.raises(PoolExhausted):
+        pool.alloc(5)
+    assert pool.available == 4
+    pool.check_invariants()
+    # refcounting: share then free once keeps the block live
+    pool.incref(ids)
+    assert all(pool.refcount(b) == 2 for b in ids)
+    assert pool.free(ids) == 0
+    assert pool.free(ids) == 3
+    with pytest.raises(ValueError):
+        pool.free([ids[0]])          # double free
+    with pytest.raises(ValueError):
+        pool.incref([ids[0]])        # incref of a free block
+    pool.check_invariants()
+
+
+def test_block_pool_grow_preserves_live_blocks():
+    pool = BlockPool(4)
+    ids = pool.alloc(3)
+    pool.grow(10)
+    pool.check_invariants()
+    assert pool.capacity == 9 and pool.available == 6
+    assert all(pool.refcount(b) == 1 for b in ids)
+
+
+def test_blocks_for_and_validate():
+    assert blocks_for(0, 16) == 0
+    assert blocks_for(1, 16) == 1
+    assert blocks_for(16, 16) == 1
+    assert blocks_for(17, 16) == 2
+    validate_block_size(16, 64)
+    with pytest.raises(ValueError):
+        validate_block_size(24, 64)   # does not divide
+    with pytest.raises(ValueError):
+        validate_block_size(0, 64)
+
+
+# ---------------------------------------------------------------------------
+# slot tables
+# ---------------------------------------------------------------------------
+
+def test_slot_tables_lifecycle():
+    t = SlotTables(2, 4, block_size=16)
+    t.assign(0, [3, 5], length=20, offset=7)
+    assert t.slot_blocks(0) == [3, 5]
+    assert t.length[0] == 20 and t.offset[0] == 7
+    t.append_block(0, 9)
+    assert t.slot_blocks(0) == [3, 5, 9]
+    t.replace_block(0, 1, 6)          # CoW swap
+    assert t.slot_blocks(0) == [3, 6, 9]
+    # ticks mirror the slotted decode's length+1 for every slot
+    t.tick()
+    assert t.length[0] == 21 and t.length[1] == 1
+    ids = t.clear(0)
+    assert ids == [3, 6, 9]
+    assert np.all(t.table[0] == NULL_BLOCK)
+    # stale length survives clear (garbage-lane bit-parity with slotted)
+    assert t.length[0] == 21
+    t.grow(6)
+    assert t.blocks_per_slot == 6
+    with pytest.raises(ValueError):
+        t.assign(1, list(range(7)), 10, 0)
+
+
+# ---------------------------------------------------------------------------
+# device data path
+# ---------------------------------------------------------------------------
+
+def _pool_fixture(L=2, N=8, bs=4, KH=2, D=8):
+    return init_paged_kv_cache(L, N, bs, KH, D, jnp.float32)
+
+
+def test_write_gather_roundtrip_matches_contiguous():
+    L, bs, KH, D = 2, 4, 2, 8
+    pool = _pool_fixture(L=L, bs=bs, KH=KH, D=D)
+    rng = np.random.default_rng(0)
+    true_len = 10
+    S = 12                             # 3 blocks
+    k = rng.normal(size=(L, S, KH, D)).astype(np.float32)
+    v = rng.normal(size=(L, S, KH, D)).astype(np.float32)
+    ids = jnp.asarray([3, 1, 5], jnp.int32)
+    pool = write_blocks(pool, ids, jnp.asarray(k), jnp.asarray(v),
+                        true_len=true_len)
+    table = jnp.asarray([[3, 1, 5]], jnp.int32)
+    got_k = np.asarray(gather_layer(pool.k[0], table))[0]   # (S, KH, D)
+    ref = k[0].copy()
+    ref[true_len:] = 0.0               # pad guard zeroes bucket garbage
+    np.testing.assert_array_equal(got_k, ref)
+    # pages not named by block_ids stay zero
+    untouched = [b for b in range(8) if b not in (3, 1, 5)]
+    assert np.all(np.asarray(pool.k[:, untouched]) == 0.0)
+
+
+def test_append_layer_scatter_and_null_sink():
+    bs, KH, D = 4, 2, 8
+    pool_layer = jnp.zeros((6, bs, KH, D), jnp.float32)
+    table = jnp.asarray([[2, 3], [NULL_BLOCK, NULL_BLOCK]], jnp.int32)
+    lengths = jnp.asarray([5, 9], jnp.int32)   # slot1 inactive garbage lane
+    new = jnp.ones((2, KH, D), jnp.float32) * jnp.asarray(
+        [[[1.0]], [[7.0]]])
+    out = append_layer(pool_layer, new, table, lengths)
+    # slot0: token 5 -> block idx 1 (page 3), offset 1
+    np.testing.assert_array_equal(np.asarray(out[3, 1]), np.ones((KH, D)))
+    # slot1's garbage landed in the null page, nowhere else
+    live = np.asarray(out[np.asarray([1, 2, 4, 5])])
+    assert np.all(live[live != 0] == 1.0)
+    assert np.all(np.asarray(out[NULL_BLOCK, 9 % bs]) == 7.0)
+
+
+def test_copy_block_bitwise_and_grow_preserves_pages():
+    pool = _pool_fixture()
+    rng = np.random.default_rng(1)
+    k = rng.normal(size=(2, 4, 2, 8)).astype(np.float32)
+    v = rng.normal(size=(2, 4, 2, 8)).astype(np.float32)
+    pool = write_blocks(pool, jnp.asarray([2], jnp.int32),
+                        jnp.asarray(k), jnp.asarray(v))
+    pool = copy_block(pool, 6, 2)
+    np.testing.assert_array_equal(np.asarray(pool.k[:, 6]),
+                                  np.asarray(pool.k[:, 2]))
+    grown = grow_paged_kv_cache(pool, 12)
+    assert grown.num_blocks == 12
+    np.testing.assert_array_equal(np.asarray(grown.k[:, :8]),
+                                  np.asarray(pool.k))
+    assert np.all(np.asarray(grown.k[:, 8:]) == 0.0)
