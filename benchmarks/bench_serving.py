@@ -180,6 +180,52 @@ def run(emit):
     rec("serving/paged/admissions_deferred", 0.0,
         f"paged={pvs['paged']['admissions_deferred']}_"
         f"slotted={pvs['slotted']['admissions_deferred']}")
+
+    # host-tier offload vs rebuild-from-tokens: repeated cold prefix hits.
+    # A tiny fixed pool (capacity 3 blocks) forces every parked prefix out
+    # between waves; the same prompt stream then runs twice. With the host
+    # tier, the second pass swaps pages back (no prefill); without it,
+    # every cold hit re-prefills — same generations, strictly more
+    # prefill tokens.
+    cold_prompts = [[20 + i] * 8 for i in range(6)]
+    ovr = {"prompt_tokens": sum(len(p) for p in cold_prompts),
+           "passes": 2, "num_blocks": 4}
+    gens_o = {}
+    for name, host_blocks in (("swap_in", 16), ("rebuild", 0)):
+        reg_o = obs.MetricsRegistry()
+        prev = obs.set_registry(reg_o)
+        try:
+            eng = ServingEngine(cfg, params, EngineConfig(
+                max_slots=2, max_seq=64, kv_layout="paged", block_size=16,
+                num_blocks=4, host_pool_blocks=host_blocks))
+            gen = {}
+            for run_i in range(2):
+                for p in cold_prompts:
+                    eng.submit(p, max_new_tokens=4)
+                for r in eng.run():
+                    gen[(run_i, tuple(r.prompt))] = tuple(r.generated)
+                eng.scheduler.finished.clear()
+            gens_o[name] = gen
+        finally:
+            obs.set_registry(prev)
+        ovr[name] = {
+            "prefill_tokens":
+                int(reg_o.counter("engine/prefill_tokens").value),
+            "prefills": int(reg_o.counter("engine/prefills").value),
+            "swap_in_hits":
+                int(reg_o.counter("kvcache/swap_in_hits").value),
+            "offload_bytes":
+                int(reg_o.counter("kvcache/offload_bytes").value),
+            "host_pool_evictions":
+                int(reg_o.counter("kvcache/host_pool_evictions").value),
+        }
+    ovr["identical_generations"] = gens_o["swap_in"] == gens_o["rebuild"]
+    record["offload_vs_rebuild"] = ovr
+    rec("serving/offload/prefill_tokens", 0.0,
+        f"swap_in={ovr['swap_in']['prefill_tokens']}_"
+        f"rebuild={ovr['rebuild']['prefill_tokens']}")
+    rec("serving/offload/swap_in_hits", 0.0,
+        f"{ovr['swap_in']['swap_in_hits']}_of_{len(cold_prompts)}_cold_hits")
     return record
 
 

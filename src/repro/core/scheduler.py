@@ -11,6 +11,16 @@ the attention (core/shared_attention.py); the scheduler's job is request
 lifecycle + corpus affinity: requests over the same shared corpus are
 steered into the same wave so the batched GEMM sees maximal N.
 
+Under block-budget pressure the scheduler prefers **offloading** cold
+resident pages over deferring work: the engine registers a cold-page
+accountant + offloader (``set_page_offloader``), the budget then counts
+pages held only by the device prefix cache, and an admission that would
+otherwise defer first asks the engine to offload cold pages to the host
+tier (or drop them when no host tier is configured). Only when stores,
+cold pages, and blocks together still don't fit does the request defer
+(``scheduler/admission_deferred_mem``); successful offload-funded
+admissions count under ``scheduler/offload_admissions``.
+
 A wave is **never mixed**: the decode step attends one shared store for
 all slots, so every active request must be on the resident corpus
 (``corpus_id=None`` counts as its own corpus — no store). Requests on a
@@ -91,6 +101,11 @@ class Scheduler:
         self._stores: Dict[str, dict] = {}
         self._store_clock = itertools.count()
         self._store_evictor: Optional[Callable[[str], None]] = None
+        # offload admission path (paged layout): bytes of cold resident
+        # pages (held only by the engine's prefix cache) and a callback
+        # that offloads/drops them, returning the bytes actually freed
+        self._cold_bytes: Callable[[], float] = lambda: 0.0
+        self._page_offloader: Optional[Callable[[float], float]] = None
 
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -145,7 +160,7 @@ class Scheduler:
         return self._token_cost(len(req.prompt) + req.max_new_tokens)
 
     def _used_bytes(self) -> float:
-        return self.shared_bytes + sum(
+        return self.shared_bytes + self._cold_bytes() + sum(
             self._request_cost(s) for s in self.slots if s is not None)
 
     def admissible(self, req: Optional[Request] = None) -> bool:
@@ -156,6 +171,34 @@ class Scheduler:
     def set_store_evictor(self, fn: Callable[[str], None]) -> None:
         """Engine callback dropping a store's device arrays on eviction."""
         self._store_evictor = fn
+
+    def set_page_offloader(self, cold_bytes: Callable[[], float],
+                           offload: Callable[[float], float]) -> None:
+        """Wire the host-tier offload admission path: ``cold_bytes()``
+        reports device bytes held only by cold prefix pages (they now
+        count against the budget), ``offload(need)`` offloads at least
+        ``need`` of them (LRU order) and returns the bytes freed."""
+        self._cold_bytes = cold_bytes
+        self._page_offloader = offload
+
+    def _offload_cold_for(self, req: Request) -> float:
+        """Ask the engine to offload cold resident pages so ``req`` fits;
+        returns the bytes freed (0.0 when no offloader is wired or no
+        pressure exists)."""
+        if self._page_offloader is None:
+            return 0.0
+        budget = self.cfg.mem_budget_bytes
+        if budget == float("inf"):
+            return 0.0
+        shortfall = self._used_bytes() + self._request_cost(req) - budget
+        if shortfall <= 0:
+            return 0.0
+        freed = self._page_offloader(shortfall)
+        if freed > 0:
+            reg = obs.get_registry()
+            reg.inc("scheduler/page_offloads")
+            reg.inc("scheduler/offload_freed_bytes", freed)
+        return freed
 
     def register_store(self, corpus_id: str, nbytes: float) -> None:
         self._stores[corpus_id] = {"nbytes": float(nbytes), "loaded": True,
@@ -207,12 +250,20 @@ class Scheduler:
             req = self._pick_next()
             if req is None:
                 break
-            if not self.admissible(req) and \
-                    not self._evict_stores_for(self._request_cost(req),
-                                               keep=req.corpus_id):
+            offloaded = 0.0
+            if not self.admissible(req):
+                self._evict_stores_for(self._request_cost(req),
+                                       keep=req.corpus_id)
+            if not self.admissible(req):
+                # offload-vs-defer: cold resident pages go to the host
+                # tier (or are dropped) before any work is deferred
+                offloaded = self._offload_cold_for(req)
+            if not self.admissible(req):
                 obs.get_registry().inc("scheduler/admission_deferred_mem")
                 self.queue.appendleft(req)     # re-picked first next time
                 break
+            if offloaded > 0:
+                obs.get_registry().inc("scheduler/offload_admissions")
             req.slot = i
             self.slots[i] = req
             admitted.append(req)

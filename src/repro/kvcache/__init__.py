@@ -6,6 +6,7 @@ from repro.kvcache.block_table import (  # noqa: F401
     NULL_BLOCK, SlotTables, blocks_for, validate_block_size,
 )
 from repro.kvcache.paged import (  # noqa: F401
-    BlockPool, PagedKVCache, PoolExhausted, append_layer, copy_block,
-    gather_layer, grow_paged_kv_cache, init_paged_kv_cache, write_blocks,
+    BlockPool, HostBlockPool, PagedKVCache, PoolExhausted, append_layer,
+    copy_block, extract_blocks, gather_layer, grow_paged_kv_cache,
+    init_paged_kv_cache, insert_blocks, write_blocks,
 )

@@ -95,6 +95,16 @@ class SlotTables:
     def slot_blocks(self, slot: int) -> List[int]:
         return self.table[slot, : int(self.n_blocks[slot])].tolist()
 
+    def prefix_blocks(self, slot: int, n_tokens: int) -> List[int]:
+        """Block ids covering the slot's first ``n_tokens`` tokens — the
+        prompt prefix a released request parks in the prefix cache (and
+        the unit the host tier offloads). Empty when the slot maps fewer
+        blocks than the prefix needs (e.g. already released)."""
+        nb = blocks_for(n_tokens, self.block_size)
+        if nb > int(self.n_blocks[slot]):
+            return []
+        return self.table[slot, :nb].tolist()
+
     def clear(self, slot: int) -> List[int]:
         """Release a slot's mapping; returns the block ids it held.
 

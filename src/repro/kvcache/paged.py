@@ -18,16 +18,25 @@ Split of responsibilities:
   * :class:`BlockPool` — host-side allocator (ids only, no device data):
     free list, refcounts, alloc/incref/free, CoW arbitration. Pure Python
     so the scheduler/engine can run it without touching the device, and
-    so hypothesis can hammer its invariants.
+    so hypothesis can hammer its invariants. Every allocation stamps the
+    block with a fresh *generation*, so a page's identity is the pair
+    ``(block_id, generation)`` — a copy taken before the block was
+    recycled can never be confused with the block's current contents.
+  * :class:`HostBlockPool` — the host memory tier: LRU-bounded store of
+    page *copies* (``jax.device_put`` to CPU) for prefix entries evicted
+    from the device pool. Swap-in rehydrates them into freshly allocated
+    device blocks bit-exactly; only when the host tier has also evicted
+    an entry does the engine fall back to rebuild-from-tokens.
   * :class:`PagedKVCache` + the jit-friendly array ops below — the device
     data path: block-granular writes at admission, per-token scatter
     appends at decode, table gathers that rebuild a contiguous view for
     the attention (bit-identical to the slotted path when the view tiles
-    ``max_seq`` exactly).
+    ``max_seq`` exactly), page extraction/insertion for the host tier.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Sequence
+import collections
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +71,11 @@ class BlockPool:
         # contents are garbage either way; LIFO keeps the working set hot)
         self._free: List[int] = list(range(num_blocks - 1, NULL_BLOCK, -1))
         self._ref = {}  # block id -> refcount >= 1
+        # block id -> allocation generation (bumped on every alloc); a
+        # page's identity is (block_id, generation), so host-tier copies
+        # taken before a block was recycled are provably not aliases of
+        # the block's current contents
+        self._gen: Dict[int, int] = {}
 
     # -- introspection ---------------------------------------------------
     @property
@@ -83,6 +97,12 @@ class BlockPool:
     def is_free(self, block_id: int) -> bool:
         return block_id not in self._ref and block_id != NULL_BLOCK
 
+    def generation(self, block_id: int) -> int:
+        """Allocation generation of ``block_id`` (0 = never allocated).
+        Strictly increases each time the block is handed out, so
+        ``(block_id, generation)`` uniquely names one lifetime of a page."""
+        return self._gen.get(block_id, 0)
+
     # -- allocation ------------------------------------------------------
     def alloc(self, n: int = 1) -> List[int]:
         """Allocate ``n`` blocks with refcount 1; raises PoolExhausted
@@ -96,6 +116,7 @@ class BlockPool:
         ids = [self._free.pop() for _ in range(n)]
         for b in ids:
             self._ref[b] = 1
+            self._gen[b] = self._gen.get(b, 0) + 1
         return ids
 
     def incref(self, block_ids: Sequence[int]) -> None:
@@ -147,6 +168,124 @@ class BlockPool:
         assert all(c >= 1 for c in self._ref.values()), "refcount < 1"
         assert len(free) + len(self._ref) == self.capacity, \
             "block conservation violated"
+
+
+# ---------------------------------------------------------------------------
+# host memory tier
+# ---------------------------------------------------------------------------
+
+def _to_host(x) -> jax.Array:
+    """Commit an array to host (CPU) memory; the returned copy shares no
+    buffer with the device pool."""
+    try:
+        return jax.device_put(x, jax.local_devices(backend="cpu")[0])
+    except RuntimeError:           # no CPU backend registered (rare)
+        import numpy as np
+        return np.asarray(x)
+
+
+class HostBlockPool:
+    """LRU-bounded host memory tier for evicted prefix pages.
+
+    When the device prefix cache LRU-evicts a cold entry, its pages are
+    copied here (``jax.device_put`` to the CPU backend) instead of being
+    lost outright; a later prefix hit swaps them back into freshly
+    allocated device blocks (``fetch`` has move semantics — the host copy
+    is consumed by the swap-in, keeping exactly one owner per page copy).
+    Capacity is counted in blocks; inserting past it evicts entries in
+    insertion-then-touch order, exactly like the device prefix cache, so
+    the two tiers age deterministically. An entry wider than the whole
+    pool is rejected (counted by the caller), not partially stored.
+
+    Entries are verbatim snapshots: the ``(L, nb, bs, KH, D)`` k/v pages,
+    the first generated token (so a swap-in skips the prefill entirely),
+    and the ``(block_id, generation)`` pairs the pages were copied from —
+    the generation tags prove a host copy is never an alias of a live
+    device page (the source blocks have been freed, and any reuse bumps
+    their generation).
+    """
+
+    def __init__(self, capacity_blocks: int):
+        if capacity_blocks < 0:
+            raise ValueError(
+                f"negative host pool capacity {capacity_blocks}")
+        self.capacity_blocks = capacity_blocks
+        self._entries: "collections.OrderedDict" = collections.OrderedDict()
+        self._used = 0
+        self.offloads = 0
+        self.evictions = 0
+        self.rejected = 0
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def used_blocks(self) -> int:
+        return self._used
+
+    @property
+    def num_entries(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def keys(self) -> List:
+        """Keys in eviction (insertion-then-touch) order."""
+        return list(self._entries)
+
+    # -- offload / swap-in ----------------------------------------------
+    def offload(self, key, k_pages, v_pages, first: int,
+                gens: Sequence[Tuple[int, int]] = ()) -> List:
+        """Copy an evicted prefix entry's pages to host; returns the keys
+        this insertion LRU-evicted (empty when it fit). ``k_pages`` /
+        ``v_pages`` are ``(L, nb, bs, KH, D)``; ``gens`` the source pages'
+        ``(block_id, generation)`` identity at offload time."""
+        nb = int(k_pages.shape[1])
+        if nb == 0 or self.capacity_blocks == 0:
+            return []
+        if nb > self.capacity_blocks:
+            self.rejected += 1
+            return []
+        if key in self._entries:          # refresh: re-insert at MRU end
+            self._used -= self._entries.pop(key)["blocks"]
+        evicted = []
+        while self._used + nb > self.capacity_blocks:
+            old_key, old = self._entries.popitem(last=False)
+            self._used -= old["blocks"]
+            self.evictions += 1
+            evicted.append(old_key)
+        self._entries[key] = {
+            "k": _to_host(k_pages), "v": _to_host(v_pages),
+            "first": int(first), "gens": tuple(gens), "blocks": nb,
+        }
+        self._used += nb
+        self.offloads += 1
+        return evicted
+
+    def fetch(self, key) -> Optional[dict]:
+        """Consume an entry for swap-in (move semantics): the pages become
+        device-resident again and the host copy is dropped. None on miss."""
+        entry = self._entries.pop(key, None)
+        if entry is not None:
+            self._used -= entry["blocks"]
+        return entry
+
+    def touch(self, key) -> bool:
+        """Refresh an entry's LRU position without consuming it."""
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return True
+        return False
+
+    def check_invariants(self) -> None:
+        """Raises AssertionError on a corrupted host pool (the stateful
+        property suite calls this after every step)."""
+        used = sum(e["blocks"] for e in self._entries.values())
+        assert used == self._used, "host pool block accounting drifted"
+        assert self._used <= self.capacity_blocks, "host pool over capacity"
+        assert all(e["blocks"] >= 1 for e in self._entries.values()), \
+            "empty host entry"
+        for e in self._entries.values():
+            assert e["k"].shape[1] == e["blocks"], "host entry shape drift"
 
 
 # ---------------------------------------------------------------------------
@@ -260,3 +399,24 @@ def copy_block(pool: PagedKVCache, dst: jax.Array,
     src = jnp.asarray(src, jnp.int32)
     return PagedKVCache(pool.k.at[:, dst].set(pool.k[:, src]),
                         pool.v.at[:, dst].set(pool.v[:, src]))
+
+
+def extract_blocks(pool: PagedKVCache,
+                   block_ids: Sequence[int]) -> Tuple[jax.Array, jax.Array]:
+    """Gather the pages named by ``block_ids`` out of the pool (read-only;
+    the pool is untouched). Returns (k, v) of shape (L, nb, bs, KH, D) —
+    the host tier's offload payload."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+    return pool.k[:, ids], pool.v[:, ids]
+
+
+def insert_blocks(pool: PagedKVCache, block_ids: jax.Array,
+                  k_pages: jax.Array, v_pages: jax.Array) -> PagedKVCache:
+    """Write whole pages back into the pool at ``block_ids`` — the swap-in
+    counterpart of :func:`extract_blocks`. ``k_pages``/``v_pages`` are
+    (L, nb, bs, KH, D); the write is bit-exact, so a round trip through
+    the host tier preserves page identity."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+    return PagedKVCache(
+        pool.k.at[:, ids].set(k_pages.astype(pool.k.dtype)),
+        pool.v.at[:, ids].set(v_pages.astype(pool.v.dtype)))

@@ -67,6 +67,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="fixed page-pool size (paged layout; default: "
                          "grow on demand)")
+    ap.add_argument("--host-pool-blocks", type=int, default=0,
+                    help="host memory tier capacity in blocks (paged "
+                         "layout): LRU-evicted prefix pages are offloaded "
+                         "to host RAM and swapped back on a later hit "
+                         "instead of being rebuilt; 0 disables the tier")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="dump the metrics registry (JSON; .lp/.txt for "
                          "line protocol) at exit")
@@ -90,7 +95,8 @@ def main(argv=None) -> dict:
             max_slots=args.slots, max_seq=args.max_seq, kernel=args.kernel,
             donate_cache=not args.no_donate, prefill_buckets=buckets,
             kv_layout=args.kv_layout, block_size=args.block_size,
-            num_blocks=args.num_blocks))
+            num_blocks=args.num_blocks,
+            host_pool_blocks=args.host_pool_blocks))
 
     corpus = synthesize_corpus(CorpusSpec(
         "domain-0", args.corpus_tokens, cfg.vocab_size, seed=args.seed))
@@ -128,6 +134,14 @@ def main(argv=None) -> dict:
             reg.gauge("engine/hbm_high_water_bytes").value,
         "wave": wave_stats(done),
     }
+    if args.kv_layout == "paged":
+        summary["host_pool_blocks"] = args.host_pool_blocks
+        summary["swap_in_hits"] = int(
+            reg.counter("kvcache/swap_in_hits").value)
+        summary["offload_bytes"] = int(
+            reg.counter("kvcache/offload_bytes").value)
+        summary["offload_admissions"] = int(
+            reg.counter("scheduler/offload_admissions").value)
     print(json.dumps(summary, indent=1))
     if args.metrics_out:
         obs.dump(args.metrics_out, reg)

@@ -13,7 +13,7 @@ from repro.obs.export import (  # noqa: F401
     dump, from_dict, load, to_dict, to_json, to_lines,
 )
 from repro.obs.metrics import (  # noqa: F401
-    COUNT_EDGES, FRACTION_EDGES, LATENCY_EDGES_S,
+    BYTES_EDGES, COUNT_EDGES, FRACTION_EDGES, LATENCY_EDGES_S,
     Counter, Gauge, Histogram, MetricsRegistry,
     enable_jit_metrics, get_registry, jit_gauge, jit_inc, jit_observe,
     jit_observe_per, reset_registry, set_registry,

@@ -38,6 +38,11 @@ FRACTION_EDGES: Tuple[float, ...] = tuple(i / 10.0 for i in range(1, 11))
 COUNT_EDGES: Tuple[float, ...] = (
     1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
 
+#: transfer sizes in bytes (host-tier page offload / swap-in payloads):
+#: powers of four from 1 KiB to 1 GiB
+BYTES_EDGES: Tuple[float, ...] = tuple(float((4 ** i) * 1024)
+                                       for i in range(11))
+
 DEFAULT_EDGES = LATENCY_EDGES_S
 
 

@@ -40,10 +40,22 @@ bit-identical to the slotted layout (the gather view tiles ``max_seq``
 exactly and masked positions carry exactly-zero probability). Prompts
 longer than ``max_seq`` are served via chunked prefill
 (``prefill_chunk``-token pieces against a growing scratch context).
+
+Host memory tier (``EngineConfig(host_pool_blocks=N)``): prefix entries
+the device pool LRU-evicts are copied page-granularly to a host-side
+pool instead of being dropped; a later hit on the same
+(corpus-fingerprint, prompt) key swaps the pages back into free device
+blocks bit-exactly, skipping the prefill entirely
+(``kvcache/swap_in_hits`` vs ``engine/prefill_tokens``). Only when the
+host tier has also evicted the entry does the engine fall back to the
+deterministic rebuild-from-tokens path. The scheduler participates via
+the offload admission path: under block-budget pressure cold resident
+pages are offloaded to admit new work rather than deferring it.
 """
 from __future__ import annotations
 
 import collections
+import hashlib
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
@@ -59,8 +71,9 @@ from repro.core.shared_kv import SharedKVStore, build_store
 from repro.kvcache.block_table import (SlotTables, blocks_for,
                                        validate_block_size)
 from repro.kvcache.cache import KVCache, write_slot_prefix
-from repro.kvcache.paged import (BlockPool, PagedKVCache, PoolExhausted,
-                                 copy_block, grow_paged_kv_cache,
+from repro.kvcache.paged import (BlockPool, HostBlockPool, PagedKVCache,
+                                 PoolExhausted, copy_block, extract_blocks,
+                                 grow_paged_kv_cache, insert_blocks,
                                  write_blocks)
 from repro.models.model import Model, build_model
 
@@ -148,9 +161,17 @@ class EngineConfig:
     # shared-attention route blocks aligned with the single-shot prefill)
     prefill_chunk: int = 128
     # cache completed prompts' pages and remap them (copy-on-write) into
-    # later requests with an identical (corpus, prompt); LRU-evicted
-    # under pool pressure
+    # later requests with an identical (corpus-content, prompt) key —
+    # keyed by corpus *fingerprint*, not id, so identical prompt prefixes
+    # hit regardless of which registered store a request is bound to;
+    # LRU-evicted under pool pressure
     share_prefix_blocks: bool = True
+    # host memory tier (paged layout): capacity, in blocks, of the host
+    # pool that LRU-evicted prefix pages are offloaded to instead of
+    # being dropped; a later prefix hit swaps them back into free device
+    # blocks bit-exactly. 0 disables the tier (evictions rebuild from
+    # tokens on the next cold hit).
+    host_pool_blocks: int = 0
 
 
 class ServingEngine:
@@ -194,6 +215,10 @@ class ServingEngine:
             raise ValueError(
                 f"unknown kv_layout {engine_cfg.kv_layout!r} "
                 "(expected 'slotted' or 'paged')")
+        elif engine_cfg.host_pool_blocks:
+            raise ValueError(
+                "host_pool_blocks requires kv_layout='paged' (the host "
+                "tier offloads pages, and the slotted layout has none)")
         self.metrics = {"decode_steps": 0, "prefills": 0,
                         "tokens_generated": 0, "wall_s": 0.0}
 
@@ -217,9 +242,22 @@ class ServingEngine:
         self._block_pool = BlockPool(cap)
         self._tables = SlotTables(ecfg.max_slots, m0, ecfg.block_size)
         self._pool: Optional[PagedKVCache] = None   # device pages, lazy
-        # (corpus_id, prompt tuple) -> {"blocks": [...], "first": tok}, LRU
+        # (corpus fingerprint, prompt tuple) -> {"blocks": [...],
+        # "first": tok}, LRU — fingerprint-keyed so identical prefixes
+        # hit across stores with the same corpus content
         self._prefix_cache: "collections.OrderedDict" = \
             collections.OrderedDict()
+        self._corpus_fp: Dict[str, str] = {}
+        # host memory tier for LRU-evicted prefix pages (capacity 0 = off)
+        self._host_pool = HostBlockPool(ecfg.host_pool_blocks)
+        # the live device pool while run() executes, so the scheduler's
+        # offload admission path can extract pages mid-schedule()
+        self._cur_pool: Optional[PagedKVCache] = None
+        self.scheduler.set_page_offloader(self._cold_page_bytes,
+                                          self._offload_cold_pages)
+        if ecfg.host_pool_blocks:
+            self.registry.set_gauge("kvcache/host_pool_capacity_blocks",
+                                    ecfg.host_pool_blocks)
         donate = ecfg.donate_cache
         self._decode_paged = jax.jit(self._decode_paged_impl,
                                      static_argnames=("use_store",),
@@ -228,6 +266,8 @@ class ServingEngine:
                                         static_argnames=("use_store",))
         self._write_blocks = jax.jit(self._write_blocks_impl,
                                      donate_argnums=(0,) if donate else ())
+        self._insert_blocks = jax.jit(insert_blocks,
+                                      donate_argnums=(0,) if donate else ())
 
     @property
     def registry(self) -> obs.MetricsRegistry:
@@ -511,29 +551,103 @@ class ServingEngine:
             0 if self.ecfg.donate_cache else pool.nbytes)
         return pool
 
-    def _evict_prefix_entries(self, need_blocks: int) -> int:
-        """Drop LRU prefix-cache entries until ``need_blocks`` pages were
-        actually released (or the cache is empty); returns #released."""
+    def _corpus_fingerprint(self, corpus_id: Optional[str]) -> Optional[str]:
+        """Content fingerprint of a registered corpus: requests bound to
+        *different* store ids with identical corpus tokens share one
+        prefix-cache namespace (their prefills are bit-identical — the
+        unique KV depends only on corpus tokens + prompt, not the id)."""
+        if corpus_id is None:
+            return None
+        fp = self._corpus_fp.get(corpus_id)
+        if fp is None:
+            toks = self._corpus_tokens[corpus_id]
+            fp = hashlib.blake2b(np.ascontiguousarray(toks).tobytes(),
+                                 digest_size=16).hexdigest()
+            self._corpus_fp[corpus_id] = fp
+        return fp
+
+    def _prefix_key(self, req: Request):
+        return (self._corpus_fingerprint(req.corpus_id), tuple(req.prompt))
+
+    def _bytes_per_block(self) -> float:
+        return self.cfg.kv_bytes_per_token * self.ecfg.block_size
+
+    def _offload_entry(self, pool: PagedKVCache, key, entry) -> None:
+        """Copy an evicted prefix entry's pages to the host tier — only
+        when every page is cold (held solely by the prefix cache; pages a
+        live slot still shares stay device-resident and re-park later)."""
+        if not self.ecfg.host_pool_blocks:
+            return
+        bp = self._block_pool
+        blocks = entry["blocks"]
+        if any(bp.refcount(b) != 1 for b in blocks):
+            return
+        reg = self.registry
+        t0 = time.perf_counter()
+        k, v = extract_blocks(pool, blocks)
+        gens = [(b, bp.generation(b)) for b in blocks]
+        evicted = self._host_pool.offload(key, k, v, entry["first"], gens)
+        reg.observe("kvcache/swap_out_latency_s",
+                    time.perf_counter() - t0, obs.LATENCY_EDGES_S)
+        nbytes = k.nbytes + v.nbytes
+        reg.inc("kvcache/offload_bytes", nbytes)
+        reg.observe("kvcache/swap_bytes", nbytes, obs.BYTES_EDGES)
+        reg.inc("kvcache/offloads")
+        if evicted:
+            reg.inc("kvcache/host_pool_evictions", len(evicted))
+        reg.set_gauge("kvcache/host_pool_blocks_used",
+                      self._host_pool.used_blocks)
+
+    def _evict_prefix_entries(self, pool: PagedKVCache,
+                              need_blocks: int) -> Tuple[int, list]:
+        """Evict LRU prefix-cache entries until ``need_blocks`` pages were
+        actually released (or the cache is empty), offloading each cold
+        entry's pages to the host tier first; returns (#released, evicted
+        keys in eviction order)."""
         reg = self.registry
         released = 0
+        evicted_keys = []
         while self._prefix_cache and released < need_blocks:
-            _, entry = self._prefix_cache.popitem(last=False)
+            key, entry = self._prefix_cache.popitem(last=False)
+            self._offload_entry(pool, key, entry)
             released += self._block_pool.free(entry["blocks"])
+            evicted_keys.append(key)
             reg.inc("kvcache/prefix_evictions")
         if released:
             reg.inc("kvcache/blocks_evicted", released)
-        return released
+        return released, evicted_keys
+
+    def _cold_page_bytes(self) -> float:
+        """Budget charge of pages held *only* by the prefix cache — what
+        the scheduler's offload admission path can reclaim."""
+        bp = self._block_pool
+        cold = sum(1 for e in self._prefix_cache.values()
+                   for b in e["blocks"] if bp.refcount(b) == 1)
+        return cold * self._bytes_per_block()
+
+    def _offload_cold_pages(self, need_bytes: float) -> float:
+        """Scheduler callback (offload-vs-defer): move at least
+        ``need_bytes`` of cold prefix pages to the host tier (or drop
+        them when the tier is off) so a new request can be admitted.
+        Returns the bytes actually freed."""
+        pool = self._cur_pool
+        if pool is None or not self._prefix_cache:
+            return 0.0
+        bpb = self._bytes_per_block()
+        need_blocks = int(-(-need_bytes // bpb))
+        released, _ = self._evict_prefix_entries(pool, need_blocks)
+        return released * bpb
 
     def _alloc_blocks(self, pool: PagedKVCache, n: int,
                       reserve: int = 0) -> Tuple[PagedKVCache, List[int]]:
-        """Allocate ``n`` pages, evicting cold prefix entries and (in
-        auto-sized mode) growing the device pool when the free list is
-        short. ``reserve`` pages beyond ``n`` size the growth so a
-        request's decode appends don't retrigger it."""
+        """Allocate ``n`` pages, evicting cold prefix entries (offloading
+        them to the host tier) and (in auto-sized mode) growing the device
+        pool when the free list is short. ``reserve`` pages beyond ``n``
+        size the growth so a request's decode appends don't retrigger it."""
         bp = self._block_pool
         want = n + reserve
         if bp.available < want:
-            self._evict_prefix_entries(want - bp.available)
+            self._evict_prefix_entries(pool, want - bp.available)
         if bp.available < want and self.ecfg.num_blocks is None:
             q = self._pool_quantum
             shortfall = want - bp.available
@@ -568,7 +682,7 @@ class ServingEngine:
         start = store.total_tokens if store is not None else 0
         use_store = store is not None and self.cfg.moska.enabled
 
-        key = (req.corpus_id, tuple(req.prompt))
+        key = self._prefix_key(req)
         entry = (self._prefix_cache.get(key)
                  if self.ecfg.share_prefix_blocks else None)
         if entry is not None:
@@ -580,6 +694,33 @@ class ServingEngine:
             return pool, int(entry["first"])
 
         nb = blocks_for(true_len, bs)
+        if self.ecfg.share_prefix_blocks and key in self._host_pool:
+            # host-tier hit: swap the offloaded pages back into freshly
+            # allocated device blocks — bit-exact, no prefill at all.
+            # Fetch before alloc: the alloc may evict other prefix
+            # entries into the host pool, which must not push this one out
+            host_entry = self._host_pool.fetch(key)
+            pool, ids = self._alloc_blocks(pool, nb,
+                                           reserve=total_blocks - nb)
+            t0 = time.perf_counter()
+            pool = self._insert_blocks(pool, jnp.asarray(ids, jnp.int32),
+                                       host_entry["k"], host_entry["v"])
+            reg.observe("kvcache/swap_in_latency_s",
+                        time.perf_counter() - t0, obs.LATENCY_EDGES_S)
+            nbytes = host_entry["k"].nbytes + host_entry["v"].nbytes
+            reg.inc("kvcache/swap_in_bytes", nbytes)
+            reg.observe("kvcache/swap_bytes", nbytes, obs.BYTES_EDGES)
+            reg.inc("kvcache/swap_in_hits")
+            reg.set_gauge("kvcache/host_pool_blocks_used",
+                          self._host_pool.used_blocks)
+            self._tables.assign(req.slot, ids, true_len, start)
+            # the slot owns the swapped-in pages exactly as if it had
+            # rebuilt them (same block pressure, no CoW on the tail);
+            # they re-park in the prefix cache at release
+            return pool, int(host_entry["first"])
+        if self.ecfg.host_pool_blocks and self.ecfg.share_prefix_blocks:
+            # cold miss in both tiers: deterministic rebuild-from-tokens
+            reg.inc("kvcache/host_pool_misses")
         pool, ids = self._alloc_blocks(pool, nb, reserve=total_blocks - nb)
         if true_len <= self.ecfg.max_seq:
             pad_len = bucket_for(self._buckets, true_len)
@@ -604,6 +745,7 @@ class ServingEngine:
         self._tables.assign(req.slot, ids, true_len, start)
         self.metrics["prefills"] += 1
         reg.inc("engine/prefills")
+        reg.inc("engine/prefill_tokens", true_len)
         return pool, int(first)
 
     def _prefill_chunked_prompt(self, req: Request, store, use_store: bool,
@@ -666,12 +808,11 @@ class ServingEngine:
         prompt pages (incl. the partial tail — later writers CoW it) are
         parked in the LRU prefix cache keyed by (corpus, prompt)."""
         tables = self._tables
-        key = (req.corpus_id, tuple(req.prompt))
+        key = self._prefix_key(req)
         if self.ecfg.share_prefix_blocks and req.generated and \
                 key not in self._prefix_cache:
-            npb = blocks_for(len(req.prompt), self.ecfg.block_size)
-            pblocks = tables.slot_blocks(slot)[:npb]
-            if len(pblocks) == npb:
+            pblocks = tables.prefix_blocks(slot, len(req.prompt))
+            if pblocks:
                 self._block_pool.incref(pblocks)
                 self._prefix_cache[key] = {"blocks": pblocks,
                                            "first": req.generated[0]}
@@ -691,6 +832,9 @@ class ServingEngine:
         try:
             with obs.span("engine.run"):
                 while not self.scheduler.idle and waves < max_waves:
+                    # the offload admission path may extract pages from
+                    # the live pool during schedule() (read-only)
+                    self._cur_pool = pool
                     admitted = self.scheduler.schedule()
                     for req in admitted:
                         tp = time.perf_counter()
@@ -757,6 +901,7 @@ class ServingEngine:
                     waves += 1
         finally:
             self._pool = pool
+            self._cur_pool = None
         self._record_block_gauges()
         wall = time.perf_counter() - t0
         self.metrics["wall_s"] += wall
@@ -796,6 +941,7 @@ class ServingEngine:
                                  jnp.asarray(true_len, jnp.int32))
         self.metrics["prefills"] += 1
         self.registry.inc("engine/prefills")
+        self.registry.inc("engine/prefill_tokens", true_len)
         return cache, int(first)
 
     def _prefill_slot_fallback(self, cache, req: Request, store):

@@ -1,0 +1,264 @@
+"""Host-tier offload differentials and determinism pins.
+
+The host memory tier's contract: enabling it changes *where* evicted
+prefix pages live, never *what* the engine generates. A cold-prefix
+workload (a fixed device pool too small to keep parked prefixes
+resident, run twice over the same prompt stream) must produce
+bit-identical generations across:
+
+  * the slotted layout (no paging at all),
+  * paged without a host tier (cold hits rebuild from tokens),
+  * paged with a host tier (cold hits swap pages back in),
+  * paged with a one-block host tier (the host tier itself LRU-evicts,
+    so hits fall through to the rebuild path),
+  * paged with prefix sharing off entirely.
+
+On top of bit-identity, the swap-in config must serve strictly fewer
+prefill tokens than the rebuild config — that is the whole point of the
+tier, and the CI bench gate (``offload_vs_rebuild``) enforces the same
+inequality at a different workload.
+
+Also pinned here: LRU eviction order for both tiers (insertion-then-
+touch, regression-pinned exactly), the scheduler's offload-vs-defer
+decision at the exact block-budget boundary, and the multi-corpus
+prefix keying (same corpus *content* under different store ids shares
+one prefix namespace; different content does not).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import get_config
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.data.pipeline import CorpusSpec, synthesize_corpus
+from repro.kvcache.paged import HostBlockPool
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, ServingEngine
+
+import jax
+
+_STATE = {}
+
+# two passes over the same prompts with a 3-usable-block pool: every
+# parked prefix is evicted between waves, so each pass-2 prompt is a
+# cold hit (swap-in, host-evicted miss, or rebuild, per config)
+COLD_PROMPTS = [[10 + i] * 8 for i in range(4)]
+
+# CI runs this suite once per reference layout: "slotted" anchors the
+# host-tier configs against the slab oracle, "paged" against the
+# paged-without-offload engine (an ample, never-evicting pool)
+REF_LAYOUT = os.environ.get("HOST_OFFLOAD_REF_LAYOUT", "slotted")
+
+
+def _setup():
+    if not _STATE:
+        cfg = get_config("tinyllama-1.1b").reduced()
+        model = build_model(cfg)
+        _STATE["cfg"] = cfg
+        _STATE["params"] = model.init(jax.random.PRNGKey(0))
+    return _STATE["cfg"], _STATE["params"]
+
+
+def _run(layout, prompts=COLD_PROMPTS, passes=2, reverse_odd=False, **kw):
+    """Run ``passes`` waves of ``prompts`` on a fresh engine; returns
+    ((pass, prompt)-keyed generations, metrics snapshot, engine). With
+    ``reverse_odd`` odd passes submit in reverse order — arrival order
+    is a scheduling detail, so generations must not depend on it."""
+    cfg, params = _setup()
+    obs.reset_registry()
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_slots=2, max_seq=64,
+                                     kv_layout=layout, **kw))
+    gens = {}
+    for i in range(passes):
+        wave = prompts[::-1] if (reverse_odd and i % 2) else prompts
+        for p in wave:
+            eng.submit(p, max_new_tokens=4)
+        for r in eng.run():
+            gens[(i, tuple(r.prompt))] = tuple(r.generated)
+        eng.scheduler.finished.clear()
+    return gens, obs.get_registry().snapshot(), eng
+
+
+def _ref_run(**kw):
+    """Reference generations under the CI-selected oracle layout."""
+    if REF_LAYOUT == "paged":
+        return _run("paged", block_size=16, num_blocks=64, **kw)
+    return _run("slotted", **kw)
+
+
+def _counter(snap, name):
+    return int(snap.get(name, {}).get("value", 0))
+
+
+def test_offload_differential_bit_identical():
+    paged = dict(block_size=16, num_blocks=4)
+    ref, _, _ = _ref_run()
+    rebuild, rsnap, _ = _run("paged", host_pool_blocks=0, **paged)
+    swap, ssnap, seng = _run("paged", host_pool_blocks=16, **paged)
+    noshare, _, _ = _run("paged", share_prefix_blocks=False, **paged)
+    # one-block host tier + reversed second pass: arrival order fights
+    # the tier's FIFO eviction order, so the tier itself churns
+    ref_rev, _, _ = _ref_run(reverse_odd=True)
+    churn, csnap, _ = _run("paged", host_pool_blocks=1, reverse_odd=True,
+                           **paged)
+
+    # one contract for every tier configuration: identical generations
+    assert rebuild == ref
+    assert swap == ref
+    assert noshare == ref
+    assert churn == ref_rev
+
+    # swap-in path: pass 2 swaps pages back instead of re-prefilling
+    assert _counter(ssnap, "kvcache/swap_in_hits") >= 1
+    assert _counter(ssnap, "kvcache/offload_bytes") > 0
+    assert _counter(ssnap, "kvcache/swap_in_bytes") > 0
+    assert _counter(ssnap, "engine/prefill_tokens") < \
+        _counter(rsnap, "engine/prefill_tokens")
+    # drained clean: every live block is a parked prefix page (held only
+    # by the cache), no slot leaked a reference
+    parked = {b for e in seng._prefix_cache.values() for b in e["blocks"]}
+    assert seng._block_pool.in_use == len(parked)
+    assert all(seng._block_pool.refcount(b) == 1 for b in parked)
+
+    # one-block host tier: the tier itself churns, hits fall through to
+    # the deterministic rebuild path (host_pool_misses)
+    assert _counter(csnap, "kvcache/host_pool_evictions") >= 1
+    assert _counter(csnap, "kvcache/host_pool_misses") >= 1
+    assert _counter(csnap, "kvcache/swap_in_hits") < len(COLD_PROMPTS)
+
+
+def test_host_tier_invisible_under_cow_divergence():
+    # ample pool: prefix hits stay device-resident and decode appends
+    # into shared tail pages (copy-on-write); the enabled-but-idle host
+    # tier must not perturb that path either
+    prompts = COLD_PROMPTS + [COLD_PROMPTS[0]]   # duplicate => CoW
+    ref, _, _ = _ref_run(prompts=prompts)
+    got, snap, _ = _run("paged", prompts=prompts, block_size=16,
+                        num_blocks=64, host_pool_blocks=16)
+    assert got == ref
+    assert _counter(snap, "kvcache/cow_copies") >= 1
+    assert _counter(snap, "kvcache/prefix_hits") >= 1
+
+
+def test_multi_corpus_prefix_keying_by_content():
+    cfg, params = _setup()
+    toks = synthesize_corpus(CorpusSpec("shared", 128, cfg.vocab_size))
+    other = synthesize_corpus(CorpusSpec("other", 128, cfg.vocab_size,
+                                         seed=7))
+    prompt = [5] * 8
+    obs.reset_registry()
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_slots=2, max_seq=64,
+                                     kv_layout="paged", block_size=16))
+    eng.register_corpus("c0", toks)
+    eng.register_corpus("c1", toks)        # same content, different id
+    eng.register_corpus("c2", other)       # different content
+    gens = {}
+    for cid in ("c0", "c1", "c2"):
+        eng.submit(prompt, max_new_tokens=4, corpus_id=cid)
+        gens[cid] = tuple(eng.run()[0].generated)
+        eng.scheduler.finished.clear()
+    snap = obs.get_registry().snapshot()
+    # identical content => same fingerprint => the c1 request hits the
+    # prefix entry the c0 request parked, across store ids
+    assert _counter(snap, "kvcache/prefix_hits") == 1
+    assert gens["c0"] == gens["c1"]
+    # different content must NOT share the namespace (its unique KV is
+    # conditioned on a different shared context)
+    assert len(eng._prefix_cache) == 2     # (shared-fp, p) and (other-fp, p)
+
+
+def test_host_pool_lru_order_pinned():
+    def pages(nb):
+        a = np.zeros((1, nb, 1, 1, 1), np.float32)
+        return a, a
+
+    hp = HostBlockPool(3)
+    for key in ("a", "b", "c"):
+        assert hp.offload(key, *pages(1), first=0) == []
+    assert hp.keys() == ["a", "b", "c"]    # insertion order
+    assert hp.touch("a")
+    assert hp.keys() == ["b", "c", "a"]    # touch refreshes to MRU
+    # a two-block insert must evict exactly the two LRU entries, oldest
+    # first — regression-pinned order, not just membership
+    assert hp.offload("d", *pages(2), first=0) == ["b", "c"]
+    assert hp.keys() == ["a", "d"]
+    assert hp.used_blocks == 3 and hp.evictions == 2
+    # refresh of an existing key re-inserts at the MRU end
+    assert hp.offload("a", *pages(1), first=0) == []
+    assert hp.keys() == ["d", "a"]
+    hp.check_invariants()
+
+
+def test_device_prefix_cache_lru_order_pinned():
+    cfg, params = _setup()
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_slots=2, max_seq=64,
+                                     kv_layout="paged", block_size=16,
+                                     num_blocks=8))
+    bp = eng._block_pool
+    for key in ("a", "b", "c"):
+        eng._prefix_cache[key] = {"blocks": bp.alloc(1), "first": 0}
+    eng._prefix_cache.move_to_end("a")     # hit refreshes to MRU
+    released, evicted = eng._evict_prefix_entries(None, 2)
+    assert released == 2
+    assert evicted == ["b", "c"]           # insertion-then-touch order
+    assert list(eng._prefix_cache) == ["a"]
+    bp.check_invariants()
+
+
+def test_scheduler_offload_vs_defer_at_budget_boundary():
+    # one request costs exactly one block (16 tokens * 1 B/token); the
+    # budget holds exactly one block, but cold prefix pages already fill
+    # it — admission must offload them, not defer
+    def mk(budget, cold_start, can_free):
+        obs.reset_registry()
+        s = Scheduler(SchedulerConfig(
+            max_slots=2, mem_budget_bytes=budget,
+            unique_bytes_per_token=1.0, max_seq=64,
+            kv_layout="paged", block_size=16))
+        cold = {"bytes": float(cold_start)}
+        asked = []
+
+        def offload(need):
+            asked.append(need)
+            if not can_free:
+                return 0.0
+            freed = min(cold["bytes"], need)
+            cold["bytes"] -= freed
+            return freed
+
+        s.set_page_offloader(lambda: cold["bytes"], offload)
+        s.submit([1] * 12, 4)              # 16 tokens => 16 bytes
+        return s, s.schedule(), asked
+
+    # boundary fit: cold pages + request == budget exactly => no offload
+    s, admitted, asked = mk(budget=32.0, cold_start=16.0, can_free=True)
+    assert len(admitted) == 1 and asked == []
+
+    # one byte short: the shortfall is offloaded and the work admitted
+    s, admitted, asked = mk(budget=31.0, cold_start=16.0, can_free=True)
+    snap = obs.get_registry().snapshot()
+    assert len(admitted) == 1
+    assert asked == [1.0]                  # asks for the exact shortfall
+    assert _counter(snap, "scheduler/offload_admissions") == 1
+    assert _counter(snap, "scheduler/admission_deferred_mem") == 0
+
+    # nothing reclaimable: same pressure now defers instead
+    s, admitted, asked = mk(budget=31.0, cold_start=16.0, can_free=False)
+    snap = obs.get_registry().snapshot()
+    assert admitted == [] and asked == [1.0]
+    assert _counter(snap, "scheduler/offload_admissions") == 0
+    assert _counter(snap, "scheduler/admission_deferred_mem") == 1
+    assert len(s.queue) == 1               # still queued, not dropped
+
+
+def test_slotted_layout_rejects_host_pool():
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(cfg, params,
+                      EngineConfig(max_slots=2, max_seq=64,
+                                   host_pool_blocks=4))

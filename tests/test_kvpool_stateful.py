@@ -1,0 +1,320 @@
+"""Stateful property suite for the two-tier KV block pool.
+
+A single model (:class:`_TwoTierModel`) drives random interleavings of
+alloc / incref (prefix share) / CoW / free / offload / swap-in against a
+real ``BlockPool`` + ``HostBlockPool`` pair, shadowing them with pure
+Python bookkeeping, and checks after every step:
+
+  * refcount conservation — the pool's refcounts equal the model's for
+    every block, and free + live == capacity (free-list integrity);
+  * no double-free / no incref-of-free — both raise, and a freed block
+    only ever returns to the free list once;
+  * no device/host page aliasing — a host entry is a verbatim *copy*:
+    its payload still equals the offload-time snapshot after the source
+    blocks were recycled and overwritten, and the generation tags prove
+    it (a source block whose generation is unchanged since offload must
+    still be free; any reuse bumped it);
+  * host-tier integrity — block accounting matches the entries, capacity
+    is never exceeded, eviction is LRU.
+
+The hypothesis rule-based state machine explores random interleavings
+when hypothesis is installed; the deterministic fallback walks (seeded
+rng over the same model) always run.
+"""
+import numpy as np
+import pytest
+
+from repro.kvcache.paged import BlockPool, HostBlockPool, PoolExhausted
+
+try:
+    from hypothesis import settings
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule)
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+class _TwoTierModel:
+    """Shadow model + operation vocabulary shared by the hypothesis state
+    machine and the deterministic fallback walks."""
+
+    def __init__(self, num_blocks: int, host_blocks: int):
+        self.pool = BlockPool(num_blocks)
+        self.host = HostBlockPool(host_blocks)
+        self.tables = []          # live mappings: lists of block ids
+        self.refs = {}            # block -> model refcount
+        self.content = {}         # block -> payload currently on "device"
+        self.expected = {}        # host key -> (payloads, gens) snapshot
+        self._payload = 0.0
+        self._key = 0
+
+    # -- helpers ---------------------------------------------------------
+    def _fresh_payload(self) -> float:
+        self._payload += 1.0
+        return self._payload
+
+    def _pages(self, payloads):
+        """Fake (L, nb, bs, KH, D) device pages holding one payload per
+        block — enough to detect any bit of aliasing or reordering."""
+        arr = np.asarray(payloads, np.float32).reshape(1, -1, 1, 1, 1)
+        return arr, arr + 0.5
+
+    # -- operations ------------------------------------------------------
+    def op_alloc(self, n: int):
+        gens_before = {b: self.pool.generation(b)
+                       for b in range(self.pool.num_blocks)}
+        try:
+            ids = self.pool.alloc(n)
+        except PoolExhausted:
+            assert self.pool.available < n
+            return
+        assert len(set(ids)) == n
+        for b in ids:
+            # every hand-out bumps the block's generation exactly once
+            assert self.pool.generation(b) == gens_before[b] + 1
+            assert b not in self.refs, "allocated a live block"
+            self.refs[b] = 1
+            self.content[b] = self._fresh_payload()
+        self.tables.append(list(ids))
+
+    def op_share(self, i: int):
+        if not self.tables:
+            return
+        t = self.tables[i % len(self.tables)]
+        self.pool.incref(t)
+        for b in t:
+            self.refs[b] += 1
+        self.tables.append(list(t))
+
+    def op_cow(self, i: int, j: int):
+        if not self.tables:
+            return
+        t = self.tables[i % len(self.tables)]
+        b = t[j % len(t)]
+        if not self.pool.needs_copy(b):
+            return
+        try:
+            new = self.pool.alloc(1)[0]
+        except PoolExhausted:
+            return
+        self.refs[new] = 1
+        self.content[new] = self.content[b]
+        self.pool.free([b])
+        self.refs[b] -= 1
+        t[t.index(b)] = new
+
+    def op_release(self, i: int):
+        if not self.tables:
+            return
+        t = self.tables.pop(i % len(self.tables))
+        self.pool.free(t)
+        for b in t:
+            self.refs[b] -= 1
+            if self.refs[b] == 0:
+                del self.refs[b]
+
+    def op_offload(self, i: int):
+        """Evict a cold mapping (all blocks refcount 1, like a prefix
+        entry owned only by the cache) through the host tier."""
+        if not self.tables:
+            return
+        i %= len(self.tables)
+        t = self.tables[i]
+        if any(self.refs[b] != 1 for b in t):
+            return
+        payloads = tuple(self.content[b] for b in t)
+        gens = tuple((b, self.pool.generation(b)) for b in t)
+        k, v = self._pages(payloads)
+        self._key += 1
+        key = f"entry-{self._key}"
+        stored_before = key in self.host
+        assert not stored_before
+        evicted = self.host.offload(key, k, v, first=7, gens=gens)
+        for ek in evicted:
+            del self.expected[ek]
+        if key in self.host:
+            self.expected[key] = (payloads, gens)
+        else:                      # wider than the whole host pool
+            assert len(t) > self.host.capacity_blocks or \
+                self.host.capacity_blocks == 0
+        self.tables.pop(i)
+        self.pool.free(t)
+        for b in t:
+            del self.refs[b]
+
+    def op_swap_in(self, i: int):
+        if not self.expected:
+            return
+        key = sorted(self.expected)[i % len(self.expected)]
+        payloads, gens = self.expected[key]
+        if self.pool.available < len(payloads):
+            return
+        entry = self.host.fetch(key)
+        assert entry is not None
+        del self.expected[key]
+        # no aliasing: the host copy still equals the offload-time
+        # snapshot, regardless of what happened to the source blocks
+        got = np.asarray(entry["k"]).reshape(-1)
+        np.testing.assert_array_equal(got, np.asarray(payloads, np.float32))
+        np.testing.assert_array_equal(np.asarray(entry["v"]).reshape(-1),
+                                      got + 0.5)
+        assert entry["gens"] == gens
+        for b, g in gens:
+            # an unchanged generation means the source block was never
+            # reused since offload — it must still be on the free list
+            if self.pool.generation(b) == g:
+                assert self.pool.is_free(b), \
+                    f"block {b} live with stale generation {g}"
+            else:
+                assert self.pool.generation(b) > g
+        ids = self.pool.alloc(len(payloads))
+        for b, p in zip(ids, payloads):
+            self.refs[b] = 1
+            self.content[b] = p
+        self.tables.append(list(ids))
+
+    def op_bad_calls(self, b: int):
+        """Double-free and incref-of-free must raise and mutate nothing."""
+        b = 1 + (b % (self.pool.num_blocks - 1))
+        if not self.pool.is_free(b):
+            return
+        before = self.pool.available
+        with pytest.raises(ValueError):
+            self.pool.free([b])
+        with pytest.raises(ValueError):
+            self.pool.incref([b])
+        assert self.pool.available == before
+
+    # -- invariants ------------------------------------------------------
+    def check(self):
+        self.pool.check_invariants()
+        self.host.check_invariants()
+        for b in range(1, self.pool.num_blocks):
+            assert self.pool.refcount(b) == self.refs.get(b, 0), \
+                f"refcount drift on block {b}"
+        assert set(self.host.keys()) == set(self.expected)
+        assert self.host.used_blocks == \
+            sum(len(p) for p, _ in self.expected.values())
+
+    def drain(self):
+        while self.tables:
+            self.op_release(0)
+        self.check()
+        assert self.pool.in_use == 0
+        assert self.pool.available == self.pool.capacity
+
+
+_OPS = ("alloc", "share", "cow", "release", "offload", "swap_in", "bad")
+
+
+def _walk(model: _TwoTierModel, rng, steps: int):
+    for _ in range(steps):
+        op = _OPS[rng.integers(0, len(_OPS))]
+        i = int(rng.integers(0, 1 << 16))
+        if op == "alloc":
+            model.op_alloc(int(rng.integers(1, 4)))
+        elif op == "share":
+            model.op_share(i)
+        elif op == "cow":
+            model.op_cow(i, int(rng.integers(0, 1 << 16)))
+        elif op == "release":
+            model.op_release(i)
+        elif op == "offload":
+            model.op_offload(i)
+        elif op == "swap_in":
+            model.op_swap_in(i)
+        else:
+            model.op_bad_calls(i)
+        model.check()
+    model.drain()
+
+
+# ---------------------------------------------------------------------------
+# deterministic fallback walks (always run)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,num_blocks,host_blocks,steps", [
+    (0, 16, 4, 300),
+    (1, 6, 2, 250),      # tight device pool: exhaustion paths
+    (2, 12, 0, 200),     # host tier disabled: offload degrades to drop
+    (3, 8, 1, 250),      # one-block host tier: constant LRU churn
+])
+def test_two_tier_deterministic_walk(seed, num_blocks, host_blocks, steps):
+    _walk(_TwoTierModel(num_blocks, host_blocks),
+          np.random.default_rng(seed), steps)
+
+
+def test_offload_wider_than_host_pool_is_rejected():
+    m = _TwoTierModel(12, 2)
+    m.op_alloc(3)                 # 3 blocks > host capacity 2
+    m.op_offload(0)
+    m.check()
+    assert m.host.num_entries == 0 and m.host.rejected == 1
+    assert m.pool.in_use == 0     # rejected offload still frees the pages
+
+
+def test_swap_in_survives_source_block_recycling():
+    """The aliasing check in earnest: offload, recycle every freed block
+    with new payloads, then swap in — the host copy must be pristine."""
+    m = _TwoTierModel(8, 4)
+    m.op_alloc(2)
+    key_payloads = tuple(m.content[b] for b in m.tables[0])
+    m.op_offload(0)
+    m.op_alloc(3)                 # recycles + overwrites the freed blocks
+    m.check()
+    m.op_swap_in(0)               # asserts payload == snapshot inside
+    m.check()
+    got = tuple(m.content[b] for b in m.tables[-1])
+    assert got == key_payloads
+    m.drain()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis rule-based state machine
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    class TwoTierMachine(RuleBasedStateMachine):
+        @initialize(num_blocks=st.integers(3, 24),
+                    host_blocks=st.integers(0, 6))
+        def init_pools(self, num_blocks, host_blocks):
+            self.model = _TwoTierModel(num_blocks, host_blocks)
+
+        @rule(n=st.integers(1, 4))
+        def alloc(self, n):
+            self.model.op_alloc(n)
+
+        @rule(i=st.integers(0, 1 << 16))
+        def share(self, i):
+            self.model.op_share(i)
+
+        @rule(i=st.integers(0, 1 << 16), j=st.integers(0, 1 << 16))
+        def cow(self, i, j):
+            self.model.op_cow(i, j)
+
+        @rule(i=st.integers(0, 1 << 16))
+        def release(self, i):
+            self.model.op_release(i)
+
+        @rule(i=st.integers(0, 1 << 16))
+        def offload(self, i):
+            self.model.op_offload(i)
+
+        @rule(i=st.integers(0, 1 << 16))
+        def swap_in(self, i):
+            self.model.op_swap_in(i)
+
+        @rule(b=st.integers(0, 1 << 16))
+        def bad_calls(self, b):
+            self.model.op_bad_calls(b)
+
+        @invariant()
+        def invariants_hold(self):
+            if hasattr(self, "model"):
+                self.model.check()
+
+    TwoTierMachine.TestCase.settings = settings(
+        max_examples=30, stateful_step_count=40, deadline=None)
+    TestTwoTierStateMachine = TwoTierMachine.TestCase
