@@ -423,6 +423,37 @@ def bandwidth_scaling_fig1b(batches: List[int], llm: LLMSpec = LLMSpec(),
     }
 
 
+def size_host_pool_blocks(workset_tokens: float, block_size: int,
+                          device_pool_blocks: Optional[int] = None,
+                          active_tokens: float = 0.0) -> int:
+    """Host-tier sizing heuristic (``--host-pool-blocks auto``).
+
+    The host pool's job is to keep the *prefix working set* — the corpus
+    of distinct (corpus, prompt) prefixes the request stream revisits —
+    swappable instead of rebuilt. The capacity-model view: the two tiers
+    together should hold the working set, so the host tier needs whatever
+    the device pool cannot keep resident once the *active* requests'
+    unique KV has claimed its share.
+
+      host_blocks = ceil(workset / bs)
+                    - max(device_blocks - 1 - ceil(active / bs), 0)
+
+    (the -1 is the reserved null block). With an elastic device pool
+    (``device_pool_blocks=None``) the device side grows on demand and
+    evicts only under an explicit memory budget, so the conservative
+    answer is the full working set — host capacity is cheap relative to
+    HBM, and oversizing costs only host RAM.
+    """
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    workset_blocks = math.ceil(max(workset_tokens, 0.0) / block_size)
+    if device_pool_blocks is None:
+        return workset_blocks
+    active_blocks = math.ceil(max(active_tokens, 0.0) / block_size)
+    device_resident = max(device_pool_blocks - 1 - active_blocks, 0)
+    return max(workset_blocks - device_resident, 0)
+
+
 def headline_gain(llm: LLMSpec = LLMSpec(), w: Workload = Workload(),
                   cluster: ClusterSpec = ClusterSpec()) -> Dict[str, float]:
     """Max MoSKA gain over each baseline across the Fig. 4 sweep."""

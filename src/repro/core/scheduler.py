@@ -330,6 +330,40 @@ class Scheduler:
         reg.inc("scheduler/affinity_misses")
         return None
 
+    def lookahead(self, n: int) -> List[Request]:
+        """Preview (never admit) up to ``n`` queued requests most likely
+        to be admitted next — the prefetch engine's hint source.
+
+        Mirrors ``_pick_next``'s affinity order without mutating any
+        state (no skips counted, no residency flips, no queue edits):
+        resident-corpus entries first in queue order, then the corpus
+        residency would flip to once the wave drains (the first
+        non-resident request's), again in queue order. A wrong
+        prediction costs one wasted transfer, never correctness, so this
+        stays deliberately simple (it ignores the starvation override; a
+        starved head is the next flip target anyway)."""
+        if n <= 0 or not self.queue:
+            return []
+        out: List[Request] = []
+        for r in self.queue:
+            if r.corpus_id == self.resident_corpus:
+                out.append(r)
+                if len(out) >= n:
+                    return out
+        # past the resident traffic, the next admissible corpus is the
+        # one residency flips to when the wave drains
+        flip = None
+        for r in self.queue:
+            if r.corpus_id == self.resident_corpus:
+                continue
+            if flip is None:
+                flip = r.corpus_id
+            if r.corpus_id == flip:
+                out.append(r)
+                if len(out) >= n:
+                    break
+        return out
+
     def _wave_live(self) -> bool:
         return any(s is not None for s in self.slots)
 

@@ -45,18 +45,23 @@ def _record_dispatch(qmask: jax.Array, keep: jax.Array,
 
     ``layer_idx`` (traced scalar, from the layer scan) additionally files
     the utilization under a per-layer histogram
-    (``moska/dispatch_capacity_utilization_by_layer/L{i}``) so routing
-    hot spots are attributable to individual layers."""
+    (``moska/dispatch_capacity_utilization_by_layer/L{i}``) and the
+    capacity-cliff drops under a per-layer counter
+    (``moska/dropped_queries_by_layer/L{i}``), so routing hot spots —
+    and the layers actually losing routes to overflow — are attributable
+    individually."""
     if not obs.metrics.JIT_METRICS:
         return
     util = jnp.mean(qmask.astype(jnp.float32))
+    dropped = jnp.sum(~keep)
     obs.jit_observe("moska/dispatch_capacity_utilization", util,
                     edges=obs.FRACTION_EDGES)
     if layer_idx is not None:
         obs.jit_observe_per("moska/dispatch_capacity_utilization_by_layer",
                             layer_idx, util, edges=obs.FRACTION_EDGES)
+        obs.jit_inc_per("moska/dropped_queries_by_layer", layer_idx, dropped)
     obs.jit_inc("moska/dispatched_queries", jnp.sum(keep))
-    obs.jit_inc("moska/dropped_queries", jnp.sum(~keep))
+    obs.jit_inc("moska/dropped_queries", dropped)
 
 
 class SharedPartial(NamedTuple):

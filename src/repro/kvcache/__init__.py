@@ -10,3 +10,4 @@ from repro.kvcache.paged import (  # noqa: F401
     copy_block, extract_blocks, gather_layer, grow_paged_kv_cache,
     init_paged_kv_cache, insert_blocks, write_blocks,
 )
+from repro.kvcache.transfer import PrefetchEngine  # noqa: F401

@@ -269,6 +269,14 @@ class HostBlockPool:
             self._used -= entry["blocks"]
         return entry
 
+    def peek(self, key) -> Optional[dict]:
+        """Read an entry without consuming it or touching its LRU position
+        — the prefetch engine's view (``repro.kvcache.transfer``): a
+        prefetch must not pin entries against eviction, and issuing one
+        must not perturb the tier's aging relative to the non-prefetching
+        engine (bit-identical degradation). None on miss."""
+        return self._entries.get(key)
+
     def touch(self, key) -> bool:
         """Refresh an entry's LRU position without consuming it."""
         if key in self._entries:

@@ -1,0 +1,150 @@
+"""Async host->device page transfers for the paged serving hot path.
+
+The host tier (``HostBlockPool``) made cold prefix hits cheap in *tokens*
+(swap pages back instead of re-prefilling) but not in *time*: the swap-in
+still moves pages up synchronously, stalling the admission that needs
+them. :class:`PrefetchEngine` issues those copies early — during a decode
+wave, for the prefix entries the scheduler's lookahead predicts will be
+admitted next — so by the time ``_prefill_slot_paged`` runs, the pages
+are already device-resident (or at worst mid-flight, a bounded wait).
+
+Mechanics, and why this is safe:
+
+  * ``issue(key)`` peeks the host entry (non-consuming, LRU-neutral: a
+    prefetch never pins an entry against eviction nor perturbs the
+    tier's aging) and calls ``jax.device_put`` on its pages. JAX async
+    dispatch returns immediately — the copy proceeds while the host
+    thread keeps working and the device decodes. In-flight transfers are
+    bounded by ``depth``.
+  * A transfer carries the entry's generation-tagged page identity (the
+    ``(block_id, generation)`` pairs stamped at offload time). Host
+    entries are immutable snapshots, so the transferred pages can never
+    alias a live device page — but the *key* can be re-offloaded with
+    different pages after the tier churned. The consumer therefore
+    matches generations: ``take(key)`` resolves against the entry
+    actually fetched, and a mismatch means the transfer belongs to a
+    dead lifetime — discard it and swap in the current entry (the
+    values are bit-identical either way; the generations are the proof
+    of identity, not the contents).
+  * ``sweep()`` drops in-flight transfers whose host entry was evicted
+    or replaced (stale generations) so a bounded ``depth`` is never
+    clogged by dead transfers. Dropping a jax array just releases the
+    buffer; an incomplete copy is cancelled by the runtime.
+
+Degradation contract: with the engine's prefetch depth at 0 (or no host
+tier) nothing here runs and the swap-in path is byte-for-byte the PR 9
+synchronous one. With prefetching on, the only observable differences
+are timing and the ``kvcache/prefetch_{issued,hits,wasted}`` counters —
+generations are bit-identical.
+"""
+from __future__ import annotations
+
+import collections
+from typing import List, Optional
+
+import jax
+
+from repro.kvcache.paged import HostBlockPool
+
+
+class PrefetchEngine:
+    """Bounded pool of in-flight host->device page transfers, keyed like
+    the prefix cache by ``(corpus fingerprint, prompt)``."""
+
+    def __init__(self, host_pool: HostBlockPool, depth: int,
+                 device=None):
+        if depth < 0:
+            raise ValueError(f"negative prefetch depth {depth}")
+        self.host_pool = host_pool
+        self.depth = depth
+        self._device = device
+        # key -> {"k", "v": device arrays (possibly still transferring),
+        #         "first": int, "gens": ((block, gen), ...), "blocks": nb}
+        self._inflight: "collections.OrderedDict" = collections.OrderedDict()
+        self.issued = 0
+        self.resolved = 0
+        self.discarded = 0
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        return len(self._inflight)
+
+    def __contains__(self, key) -> bool:
+        return key in self._inflight
+
+    def keys(self) -> List:
+        return list(self._inflight)
+
+    # -- issue / resolve -------------------------------------------------
+    def issue(self, key) -> bool:
+        """Start an async device copy of the host entry at ``key``.
+        Returns False (no copy) when the key is already in flight, the
+        depth budget is full, or the host tier has no such entry."""
+        if self.depth <= 0 or key in self._inflight or \
+                len(self._inflight) >= self.depth:
+            return False
+        entry = self.host_pool.peek(key)
+        if entry is None:
+            return False
+        if self._device is None:
+            self._device = jax.devices()[0]
+        # async: device_put dispatches the copy and returns futures
+        self._inflight[key] = {
+            "k": jax.device_put(entry["k"], self._device),
+            "v": jax.device_put(entry["v"], self._device),
+            "first": entry["first"],
+            "gens": entry["gens"],
+            "blocks": entry["blocks"],
+        }
+        self.issued += 1
+        return True
+
+    def take(self, key) -> Optional[dict]:
+        """Claim the in-flight transfer for ``key`` (None when there is
+        none). The caller owns generation matching: compare the returned
+        ``gens`` against the host entry it fetched, and discard the
+        transfer on mismatch (a stale lifetime)."""
+        tr = self._inflight.pop(key, None)
+        if tr is not None:
+            self.resolved += 1
+        return tr
+
+    def discard(self, key) -> bool:
+        """Drop one in-flight transfer (its device buffers are released;
+        an incomplete copy is cancelled by the runtime)."""
+        if self._inflight.pop(key, None) is not None:
+            self.discarded += 1
+            return True
+        return False
+
+    def sweep(self) -> int:
+        """Discard in-flight transfers whose host entry disappeared or
+        was replaced (generation mismatch) since issue — they can never
+        resolve to a hit. Returns how many were dropped."""
+        stale = []
+        for key, tr in self._inflight.items():
+            entry = self.host_pool.peek(key)
+            if entry is None or entry["gens"] != tr["gens"]:
+                stale.append(key)
+        for key in stale:
+            self.discard(key)
+        return len(stale)
+
+    def clear(self) -> int:
+        """Drop every in-flight transfer (engine teardown / tier reset)."""
+        n = len(self._inflight)
+        for key in list(self._inflight):
+            self.discard(key)
+        return n
+
+    def check_invariants(self) -> None:
+        """Raises AssertionError on a corrupted prefetch state (the
+        stateful property suite calls this after every step)."""
+        assert len(self._inflight) <= max(self.depth, 0), \
+            "prefetch depth exceeded"
+        assert self.resolved + self.discarded + len(self._inflight) \
+            == self.issued, "prefetch accounting drifted"
+        for key, tr in self._inflight.items():
+            assert tr["k"].shape[1] == tr["blocks"], \
+                f"in-flight transfer {key!r} shape drift"

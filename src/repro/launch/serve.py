@@ -67,15 +67,51 @@ def main(argv=None) -> dict:
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="fixed page-pool size (paged layout; default: "
                          "grow on demand)")
-    ap.add_argument("--host-pool-blocks", type=int, default=0,
+    ap.add_argument("--host-pool-blocks", default="0", metavar="N|auto",
                     help="host memory tier capacity in blocks (paged "
                          "layout): LRU-evicted prefix pages are offloaded "
                          "to host RAM and swapped back on a later hit "
-                         "instead of being rebuilt; 0 disables the tier")
+                         "instead of being rebuilt; 0 disables the tier; "
+                         "'auto' sizes it from the workload's prefix "
+                         "working set via core.analytical."
+                         "size_host_pool_blocks")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="max in-flight host->device prefetch transfers "
+                         "for predicted next-wave admissions (paged layout "
+                         "with a host tier); 0 disables prefetching")
+    ap.add_argument("--no-spec-append", action="store_true",
+                    help="disable speculative decode-boundary page "
+                         "allocation (paged layout; for differential "
+                         "debugging — generations are identical either "
+                         "way)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="run the wave's host-side bookkeeping after the "
+                         "device sync instead of inside the dispatch "
+                         "window (for differential debugging / stall "
+                         "measurement baselines)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="dump the metrics registry (JSON; .lp/.txt for "
                          "line protocol) at exit")
+    ap.add_argument("--metrics-flush-every", type=int, default=0,
+                    metavar="N",
+                    help="also rewrite --metrics-out atomically every N "
+                         "decode waves (streaming export for long serves); "
+                         "0 disables")
     args = ap.parse_args(argv)
+    if args.metrics_flush_every and not args.metrics_out:
+        ap.error("--metrics-flush-every requires --metrics-out")
+
+    if args.host_pool_blocks == "auto":
+        if args.kv_layout != "paged":
+            ap.error("--host-pool-blocks auto requires --kv-layout paged")
+        from repro.core.analytical import size_host_pool_blocks
+        host_pool_blocks = size_host_pool_blocks(
+            workset_tokens=args.requests * args.prompt_len,
+            block_size=args.block_size,
+            device_pool_blocks=args.num_blocks,
+            active_tokens=args.slots * (args.prompt_len + args.new_tokens))
+    else:
+        host_pool_blocks = int(args.host_pool_blocks)
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -96,7 +132,16 @@ def main(argv=None) -> dict:
             donate_cache=not args.no_donate, prefill_buckets=buckets,
             kv_layout=args.kv_layout, block_size=args.block_size,
             num_blocks=args.num_blocks,
-            host_pool_blocks=args.host_pool_blocks))
+            host_pool_blocks=host_pool_blocks,
+            prefetch_depth=args.prefetch_depth,
+            spec_append=not args.no_spec_append,
+            overlap_waves=not args.no_overlap))
+
+    exporter = None
+    if args.metrics_flush_every:
+        exporter = obs.StreamingExporter(args.metrics_out,
+                                         every=args.metrics_flush_every)
+        eng.wave_hooks.append(exporter.tick)
 
     corpus = synthesize_corpus(CorpusSpec(
         "domain-0", args.corpus_tokens, cfg.vocab_size, seed=args.seed))
@@ -135,13 +180,23 @@ def main(argv=None) -> dict:
         "wave": wave_stats(done),
     }
     if args.kv_layout == "paged":
-        summary["host_pool_blocks"] = args.host_pool_blocks
+        summary["host_pool_blocks"] = host_pool_blocks
         summary["swap_in_hits"] = int(
             reg.counter("kvcache/swap_in_hits").value)
         summary["offload_bytes"] = int(
             reg.counter("kvcache/offload_bytes").value)
         summary["offload_admissions"] = int(
             reg.counter("scheduler/offload_admissions").value)
+        summary["prefetch_issued"] = int(
+            reg.counter("kvcache/prefetch_issued").value)
+        summary["prefetch_hits"] = int(
+            reg.counter("kvcache/prefetch_hits").value)
+        summary["spec_pages_alloc"] = int(
+            reg.counter("kvcache/spec_pages_alloc").value)
+        summary["decode_stall_sum_s"] = reg.histogram(
+            "engine/decode_stall_s", obs.LATENCY_EDGES_S).sum
+    if exporter is not None:
+        summary["metrics_flushes"] = exporter.flushes
     print(json.dumps(summary, indent=1))
     if args.metrics_out:
         obs.dump(args.metrics_out, reg)

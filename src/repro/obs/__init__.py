@@ -10,12 +10,12 @@ code uses ``jit_inc``/``jit_gauge``/``jit_observe``, which are no-ops
 unless ``enable_jit_metrics(True)`` was called before tracing.
 """
 from repro.obs.export import (  # noqa: F401
-    dump, from_dict, load, to_dict, to_json, to_lines,
+    StreamingExporter, dump, from_dict, load, to_dict, to_json, to_lines,
 )
 from repro.obs.metrics import (  # noqa: F401
     BYTES_EDGES, COUNT_EDGES, FRACTION_EDGES, LATENCY_EDGES_S,
     Counter, Gauge, Histogram, MetricsRegistry,
-    enable_jit_metrics, get_registry, jit_gauge, jit_inc, jit_observe,
-    jit_observe_per, reset_registry, set_registry,
+    enable_jit_metrics, get_registry, jit_gauge, jit_inc, jit_inc_per,
+    jit_observe, jit_observe_per, reset_registry, set_registry,
 )
 from repro.obs.trace import Span, current_span, span  # noqa: F401

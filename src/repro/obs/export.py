@@ -87,9 +87,12 @@ def to_lines(reg: Optional[MetricsRegistry] = None) -> List[str]:
     return lines
 
 
-def dump(path: str, reg: Optional[MetricsRegistry] = None) -> None:
+def dump(path: str, reg: Optional[MetricsRegistry] = None,
+         atomic: bool = False) -> None:
     """Write the registry to ``path``: JSON unless the extension is
-    ``.lp``/``.txt`` (line protocol)."""
+    ``.lp``/``.txt`` (line protocol). With ``atomic`` the body lands via
+    a same-directory temp file + ``os.replace``, so a concurrent reader
+    never sees a torn dump — the streaming exporter's mode."""
     if path.endswith((".lp", ".txt")):
         body = "\n".join(to_lines(reg)) + "\n"
     else:
@@ -97,8 +100,49 @@ def dump(path: str, reg: Optional[MetricsRegistry] = None) -> None:
     parent = os.path.dirname(path)
     if parent:
         os.makedirs(parent, exist_ok=True)
-    with open(path, "w") as f:
+    target = f"{path}.tmp" if atomic else path
+    with open(target, "w") as f:
         f.write(body)
+    if atomic:
+        os.replace(target, path)
+
+
+class StreamingExporter:
+    """Periodic registry flusher for long-running serves.
+
+    ``tick()`` once per decode wave; every ``every``-th tick rewrites
+    ``path`` with the current registry state (atomically, so a tailing
+    reader never sees a torn file). The final ``flush()`` at exit is the
+    caller's job — the launcher's ``--metrics-out`` dump doubles as it.
+
+    Wired by ``launch/serve --metrics-flush-every N`` through the
+    engine's ``wave_hooks`` (host-side callbacks at the end of each
+    wave), so a stuck or hours-long serve is observable mid-flight
+    instead of only post-mortem.
+    """
+
+    def __init__(self, path: str, every: int = 1,
+                 reg: Optional[MetricsRegistry] = None):
+        if every < 1:
+            raise ValueError(f"flush interval must be >= 1, got {every}")
+        self.path = path
+        self.every = int(every)
+        self._reg = reg
+        self.ticks = 0
+        self.flushes = 0
+
+    def tick(self) -> bool:
+        """Count one wave; flush when the interval elapses. Returns
+        whether this tick flushed."""
+        self.ticks += 1
+        if self.ticks % self.every:
+            return False
+        self.flush()
+        return True
+
+    def flush(self) -> None:
+        dump(self.path, self._reg, atomic=True)
+        self.flushes += 1
 
 
 def load(path: str) -> MetricsRegistry:

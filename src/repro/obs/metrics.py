@@ -266,6 +266,10 @@ def _cb_observe_per(prefix, edges, label, v):
     get_registry().observe(f"{prefix}/L{int(label)}", float(v), edges)
 
 
+def _cb_inc_per(prefix, label, v):
+    get_registry().inc(f"{prefix}/L{int(label)}", float(v))
+
+
 def _callback(fn, *values) -> None:
     import jax
     jax.debug.callback(fn, *values)
@@ -303,3 +307,13 @@ def jit_observe_per(prefix: str, label, value,
         import functools
         _callback(functools.partial(_cb_observe_per, prefix, tuple(edges)),
                   label, value)
+
+
+def jit_inc_per(prefix: str, label, value) -> None:
+    """Counter increment under a runtime-labeled name
+    (``{prefix}/L{label}``) — the counter sibling of
+    :func:`jit_observe_per`, for per-layer counts recorded inside the
+    layer ``lax.scan`` (e.g. dropped queries by layer)."""
+    if JIT_METRICS:
+        import functools
+        _callback(functools.partial(_cb_inc_per, prefix), label, value)

@@ -75,6 +75,7 @@ from repro.kvcache.paged import (BlockPool, HostBlockPool, PagedKVCache,
                                  PoolExhausted, copy_block, extract_blocks,
                                  grow_paged_kv_cache, insert_blocks,
                                  write_blocks)
+from repro.kvcache.transfer import PrefetchEngine
 from repro.models.model import Model, build_model
 
 #: smallest prefill bucket; "auto" buckets are powers of two from here up
@@ -172,6 +173,25 @@ class EngineConfig:
     # blocks bit-exactly. 0 disables the tier (evictions rebuild from
     # tokens on the next cold hit).
     host_pool_blocks: int = 0
+    # -- async serving pipeline (paged layout) --------------------------
+    # in-flight budget for prefetched host->device page copies: during
+    # each decode wave, prefix entries the scheduler lookahead predicts
+    # will be admitted next are device_put'd early, so the swap-in at
+    # admission pays no transfer stall (kvcache/prefetch_{issued,hits,
+    # wasted}). 0 disables prefetching (the PR 9 synchronous swap-in).
+    prefetch_depth: int = 2
+    # speculative decode appends: allocate the *next* page for any slot
+    # whose next token lands on a fresh page boundary during the current
+    # wave, keeping allocator/eviction work off the boundary wave's
+    # critical path; unused pages are reclaimed on release
+    # (kvcache/spec_pages_{alloc,reclaimed}).
+    spec_append: bool = True
+    # wave-overlap execution: dispatch the jit'd decode step, run the
+    # next wave's host-side work (table tick, speculative appends,
+    # prefetch issue) while the device computes, then block on results
+    # (engine/overlap_saved_s vs engine/decode_stall_s). Off = block
+    # immediately after dispatch, bit-identical generations.
+    overlap_waves: bool = True
 
 
 class ServingEngine:
@@ -221,6 +241,10 @@ class ServingEngine:
                 "tier offloads pages, and the slotted layout has none)")
         self.metrics = {"decode_steps": 0, "prefills": 0,
                         "tokens_generated": 0, "wall_s": 0.0}
+        # host-side callbacks run at the end of every decode wave (e.g.
+        # the streaming metrics exporter's tick); must not touch device
+        # state — the next wave may already be dispatched
+        self.wave_hooks: List[Any] = []
 
     def _init_paged_state(self):
         ecfg = self.ecfg
@@ -250,6 +274,17 @@ class ServingEngine:
         self._corpus_fp: Dict[str, str] = {}
         # host memory tier for LRU-evicted prefix pages (capacity 0 = off)
         self._host_pool = HostBlockPool(ecfg.host_pool_blocks)
+        # async swap-in: prefetched host->device copies for predicted
+        # admissions (only meaningful when the host tier can hold entries
+        # and prefix sharing gives them a key to hit)
+        self._prefetch: Optional[PrefetchEngine] = None
+        if ecfg.host_pool_blocks and ecfg.prefetch_depth and \
+                ecfg.share_prefix_blocks:
+            self._prefetch = PrefetchEngine(self._host_pool,
+                                            ecfg.prefetch_depth)
+        # speculatively appended pages not yet written: slot -> table
+        # index of the pre-allocated next page (reclaimed on release)
+        self._spec_pending: Dict[int, int] = {}
         # the live device pool while run() executes, so the scheduler's
         # offload admission path can extract pages mid-schedule()
         self._cur_pool: Optional[PagedKVCache] = None
@@ -521,6 +556,8 @@ class ServingEngine:
                         reg.inc("engine/decoded_tokens")
                     self.metrics["decode_steps"] += 1
                     reg.inc("engine/decode_steps")
+                    for hook in self.wave_hooks:
+                        hook()
                     waves += 1
         finally:
             self._cache = cache
@@ -700,11 +737,27 @@ class ServingEngine:
             # Fetch before alloc: the alloc may evict other prefix
             # entries into the host pool, which must not push this one out
             host_entry = self._host_pool.fetch(key)
+            tr = (self._prefetch.take(key)
+                  if self._prefetch is not None else None)
             pool, ids = self._alloc_blocks(pool, nb,
                                            reserve=total_blocks - nb)
             t0 = time.perf_counter()
+            if tr is not None and tr["gens"] == host_entry["gens"]:
+                # prefetched during an earlier wave: the pages are already
+                # device-resident (or mid-flight — the insert sequences
+                # after the async copy, a bounded wait, never a re-issue)
+                src_k, src_v = tr["k"], tr["v"]
+                reg.inc("kvcache/prefetch_hits")
+            else:
+                if tr is not None:
+                    # the tier churned since issue: this transfer names a
+                    # dead page lifetime — discard it and swap in the
+                    # current entry (bit-identical values either way; the
+                    # generation tags are the identity proof)
+                    reg.inc("kvcache/prefetch_wasted")
+                src_k, src_v = host_entry["k"], host_entry["v"]
             pool = self._insert_blocks(pool, jnp.asarray(ids, jnp.int32),
-                                       host_entry["k"], host_entry["v"])
+                                       src_k, src_v)
             reg.observe("kvcache/swap_in_latency_s",
                         time.perf_counter() - t0, obs.LATENCY_EDGES_S)
             nbytes = host_entry["k"].nbytes + host_entry["v"].nbytes
@@ -787,6 +840,14 @@ class ServingEngine:
         for req in active:
             slot = req.slot
             bi = int(tables.length[slot]) // self.ecfg.block_size
+            spec = self._spec_pending.get(slot)
+            if spec is not None and bi >= spec:
+                # the speculatively appended page is now the write target:
+                # it is fresh (refcount 1, never shared) so neither the
+                # append nor the CoW branch below applies — exactly the
+                # state the synchronous append would have produced
+                del self._spec_pending[slot]
+                continue
             if bi >= int(tables.n_blocks[slot]):
                 if bi >= tables.blocks_per_slot:
                     tables.grow(bi + 1)
@@ -803,11 +864,74 @@ class ServingEngine:
                     reg.inc("kvcache/cow_copies")
         return pool
 
+    def _speculative_appends(self, active: List[Request]) -> None:
+        """Decode-boundary page pre-allocation: any slot whose *next* token
+        will land on a fresh page gets that page appended now, during the
+        current wave, so the next ``_prepare_wave_blocks`` finds it already
+        in the table (host-metadata work only — BlockPool free-list +
+        numpy table mutation; the device pool is untouched, which matters
+        because it is donated into the still-in-flight decode step).
+
+        Deliberately conservative: never evicts, never grows the pool,
+        never raises — a full free list simply defers to the synchronous
+        append path, bit-identically. A wrong speculation (the request
+        finishes on the boundary token) is reclaimed in
+        ``_release_slot_paged``."""
+        if not self.ecfg.spec_append:
+            return
+        tables = self._tables
+        bp = self._block_pool
+        bs = self.ecfg.block_size
+        reg = self.registry
+        for req in active:
+            slot = req.slot
+            if slot in self._spec_pending:
+                continue
+            # lengths were just tick()'d: the slot's NEXT append lands at
+            # tables.length[slot]; speculate only when that position opens
+            # a page the table doesn't have yet
+            bi = int(tables.length[slot]) // bs
+            if bi < int(tables.n_blocks[slot]) or \
+                    bi >= tables.blocks_per_slot or bp.available < 1:
+                continue
+            ids = bp.alloc(1)
+            tables.append_block(slot, ids[0])
+            self._spec_pending[slot] = bi
+            reg.inc("kvcache/spec_pages_alloc")
+            reg.inc("kvcache/blocks_appended")
+
+    def _issue_prefetches(self) -> None:
+        """Prefetch host-tier entries the scheduler lookahead predicts will
+        be admitted next: issue non-blocking host->device copies now so the
+        swap-in at admission finds device-resident pages. Also sweeps
+        transfers whose host entry churned since issue (counted as wasted).
+        Host-metadata + async-dispatch work only — safe in the overlap
+        window."""
+        pf = self._prefetch
+        if pf is None:
+            return
+        reg = self.registry
+        stale = pf.sweep()
+        if stale:
+            reg.inc("kvcache/prefetch_wasted", stale)
+        for req in self.scheduler.lookahead(pf.depth):
+            key = self._prefix_key(req)
+            if key in self._prefix_cache:
+                continue    # device-resident: admission remaps, no copy
+            if pf.issue(key):
+                reg.inc("kvcache/prefetch_issued")
+
     def _release_slot_paged(self, req: Request, slot: int) -> None:
         """Free a finished request's pages; with prefix sharing on, its
         prompt pages (incl. the partial tail — later writers CoW it) are
         parked in the LRU prefix cache keyed by (corpus, prompt)."""
         tables = self._tables
+        if self._spec_pending.pop(slot, None) is not None:
+            # wrong speculation: the request finished before writing its
+            # pre-allocated boundary page; tables.clear below frees it
+            # with the rest of the slot (it is never in prefix_blocks —
+            # it sits beyond the written region)
+            self.registry.inc("kvcache/spec_pages_reclaimed")
         key = self._prefix_key(req)
         if self.ecfg.share_prefix_blocks and req.generated and \
                 key not in self._prefix_cache:
@@ -869,7 +993,6 @@ class ServingEngine:
                     use_store = store is not None and self.cfg.moska.enabled
                     pool = self._prepare_wave_blocks(pool, active)
                     self._note_hbm(pool.nbytes)
-                    self._record_block_gauges()
                     reg.observe("engine/wave_batch_density",
                                 len(active) / B, obs.FRACTION_EDGES)
                     reg.observe("engine/wave_active_slots", len(active),
@@ -880,11 +1003,39 @@ class ServingEngine:
                         self.params, jnp.asarray(slot_tokens), pool,
                         jnp.asarray(tbl), jnp.asarray(lens),
                         jnp.asarray(offs), store, use_store)
-                    nxt = np.asarray(nxt)  # device sync
+                    # jax returns from _decode_paged as soon as the step is
+                    # *dispatched*; np.asarray(nxt) is the block. The wave's
+                    # host-side bookkeeping (table tick, speculative page
+                    # appends, prefetch issue, gauge reads) is identical
+                    # either way — overlap mode runs it inside the dispatch
+                    # window so the block absorbs it, sync mode runs it
+                    # after. None of it may touch the device pool: that
+                    # buffer is donated into the in-flight step.
+                    if self.ecfg.overlap_waves:
+                        th = time.perf_counter()
+                        self._tables.tick()
+                        self._speculative_appends(active)
+                        self._issue_prefetches()
+                        self._record_block_gauges()
+                        reg.observe("engine/overlap_saved_s",
+                                    time.perf_counter() - th,
+                                    obs.LATENCY_EDGES_S)
+                        ts = time.perf_counter()
+                        nxt = np.asarray(nxt)  # device sync (residual wait)
+                        stall = time.perf_counter() - ts
+                    else:
+                        ts = time.perf_counter()
+                        nxt = np.asarray(nxt)  # device sync (full wait)
+                        stall = time.perf_counter() - ts
+                        self._tables.tick()
+                        self._speculative_appends(active)
+                        self._issue_prefetches()
+                        self._record_block_gauges()
                     reg.observe("engine/decode_step_latency_s",
                                 time.perf_counter() - td,
                                 obs.LATENCY_EDGES_S)
-                    self._tables.tick()
+                    reg.observe("engine/decode_stall_s", stall,
+                                obs.LATENCY_EDGES_S)
                     for req in list(active):
                         tok = int(nxt[req.slot])
                         slot = req.slot
@@ -898,6 +1049,8 @@ class ServingEngine:
                         reg.inc("engine/decoded_tokens")
                     self.metrics["decode_steps"] += 1
                     reg.inc("engine/decode_steps")
+                    for hook in self.wave_hooks:
+                        hook()
                     waves += 1
         finally:
             self._pool = pool

@@ -1,0 +1,234 @@
+"""Async serving pipeline differentials: the overlap/prefetch/speculation
+layer moves work, never changes it.
+
+One cold-prefix workload (fixed 3-usable-block device pool, host tier on,
+two passes over the same prompts — every pass-2 admission is a host-tier
+swap-in) runs under the async engine defaults and under every disabled
+combination; generations must be bit-identical across:
+
+  * wave overlap on vs off (``overlap_waves``) — the same host-side
+    bookkeeping inside vs after the device sync;
+  * prefetched vs synchronous swap-in (``prefetch_depth``) — including
+    the in-flight-wait path (on CPU every hit is taken at most one wave
+    after issue, i.e. potentially mid-flight) and the stale-discard path
+    (a one-block host tier churning under reversed arrival order);
+  * speculative decode-boundary page allocation on vs off
+    (``spec_append``) — including the wrong-speculation case where the
+    request finishes on the boundary token and the page is reclaimed;
+  * the slotted layout (the slab oracle, no paging at all).
+
+The unit-level prefetch state properties (no pinning, no aliasing while
+pending, transfer conservation) live in ``test_kvpool_stateful.py``;
+this suite checks the engine wiring end to end.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import obs
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, ServingEngine
+
+_STATE = {}
+
+COLD_PROMPTS = [[30 + i] * 8 for i in range(4)]
+
+REF_LAYOUT = os.environ.get("HOST_OFFLOAD_REF_LAYOUT", "slotted")
+
+#: all async features off — the PR 9 synchronous engine, exactly
+SYNC = dict(prefetch_depth=0, spec_append=False, overlap_waves=False)
+
+
+def _setup():
+    if not _STATE:
+        cfg = get_config("tinyllama-1.1b").reduced()
+        model = build_model(cfg)
+        _STATE["cfg"] = cfg
+        _STATE["params"] = model.init(jax.random.PRNGKey(0))
+    return _STATE["cfg"], _STATE["params"]
+
+
+def _run(layout, prompts=COLD_PROMPTS, passes=2, reverse_odd=False,
+         max_new=4, **kw):
+    """Run ``passes`` waves of ``prompts`` on a fresh engine; returns
+    ((pass, prompt)-keyed generations, metrics snapshot, engine)."""
+    cfg, params = _setup()
+    obs.reset_registry()
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_slots=2, max_seq=64,
+                                     kv_layout=layout, **kw))
+    gens = {}
+    for i in range(passes):
+        wave = prompts[::-1] if (reverse_odd and i % 2) else prompts
+        for p in wave:
+            eng.submit(p, max_new_tokens=max_new)
+        for r in eng.run():
+            gens[(i, tuple(r.prompt))] = tuple(r.generated)
+        eng.scheduler.finished.clear()
+    return gens, obs.get_registry().snapshot(), eng
+
+
+def _ref_run(**kw):
+    if REF_LAYOUT == "paged":
+        return _run("paged", block_size=16, num_blocks=64, **SYNC, **kw)
+    return _run("slotted", **kw)
+
+
+def _counter(snap, name):
+    return int(snap.get(name, {}).get("value", 0))
+
+
+def _hist(snap, name):
+    return snap.get(name, {})
+
+
+def test_async_differential_bit_identical():
+    """The headline contract: async defaults vs each feature disabled vs
+    fully-sync vs the reference layout — identical generations, and the
+    async run actually exercised the prefetch path."""
+    paged = dict(block_size=16, num_blocks=4, host_pool_blocks=16)
+    ref, _, _ = _ref_run()
+    full, fsnap, feng = _run("paged", **paged)                 # defaults on
+    sync, ssnap, _ = _run("paged", **paged, **SYNC)
+    noov, _, _ = _run("paged", **paged, overlap_waves=False)
+    nopf, _, _ = _run("paged", **paged, prefetch_depth=0)
+    nosp, _, _ = _run("paged", **paged, spec_append=False)
+
+    assert full == ref
+    assert sync == ref
+    assert noov == ref
+    assert nopf == ref
+    assert nosp == ref
+
+    # pass 2 swap-ins were served from prefetched transfers
+    assert _counter(fsnap, "kvcache/prefetch_issued") >= 1
+    assert _counter(fsnap, "kvcache/prefetch_hits") >= 1
+    assert _counter(fsnap, "kvcache/prefetch_hits") <= \
+        _counter(fsnap, "kvcache/swap_in_hits")
+    # the sync config runs no async machinery at all
+    for name in ("kvcache/prefetch_issued", "kvcache/prefetch_hits",
+                 "kvcache/spec_pages_alloc", "engine/overlap_saved_s"):
+        assert name not in ssnap
+    # overlap bookkeeping was measured, and the engine drained clean:
+    # no transfer left in flight, no speculative page left pending
+    assert _hist(fsnap, "engine/overlap_saved_s").get("count", 0) >= 1
+    assert _hist(fsnap, "engine/decode_stall_s").get("count", 0) >= 1
+    assert feng._prefetch.in_flight == 0 or \
+        feng._prefetch.in_flight <= feng._prefetch.depth
+    assert not feng._spec_pending
+
+
+def test_prefetch_stale_discard_under_host_churn():
+    """One-block host tier + reversed second pass: entries are evicted
+    between issue and admission, so transfers go stale — they must be
+    discarded (counted wasted), with generations unaffected."""
+    paged = dict(block_size=16, num_blocks=4, host_pool_blocks=1)
+    ref, _, _ = _ref_run(reverse_odd=True)
+    churn, csnap, ceng = _run("paged", reverse_odd=True, **paged)
+    churn_sync, _, _ = _run("paged", reverse_odd=True, **paged, **SYNC)
+    assert churn == ref
+    assert churn_sync == ref
+    # conservation across the whole run: everything issued was either
+    # resolved into a hit or discarded as stale — nothing leaked
+    pf = ceng._prefetch
+    assert pf.resolved + pf.discarded + pf.in_flight == pf.issued
+    assert _counter(csnap, "kvcache/prefetch_hits") + \
+        _counter(csnap, "kvcache/prefetch_wasted") + pf.in_flight == \
+        _counter(csnap, "kvcache/prefetch_issued")
+
+
+def test_speculative_append_used_and_reclaimed():
+    """Prompt of 8 + block size 16: the 8th generated token fills the
+    first page, so the 9th opens a new one. ``max_new=9`` finishes ON
+    the boundary — the speculated page is never written and must be
+    reclaimed; ``max_new=12`` writes into it. Both bit-identical to the
+    spec-off engine."""
+    paged = dict(block_size=16, num_blocks=64, host_pool_blocks=0,
+                 passes=1)
+    prompts = [[40] * 8]
+
+    used, usnap, ueng = _run("paged", prompts=prompts, max_new=12, **paged)
+    used_off, osnap, _ = _run("paged", prompts=prompts, max_new=12,
+                              spec_append=False, **paged)
+    assert used == used_off
+    assert _counter(usnap, "kvcache/spec_pages_alloc") == 1
+    assert _counter(usnap, "kvcache/spec_pages_reclaimed") == 0
+    assert not ueng._spec_pending     # consumed by the next wave
+    # page accounting conservation: the speculated append replaces the
+    # synchronous one, it doesn't add to it
+    assert _counter(usnap, "kvcache/blocks_appended") == \
+        _counter(osnap, "kvcache/blocks_appended")
+
+    recl, rsnap, reng = _run("paged", prompts=prompts, max_new=9, **paged)
+    recl_off, _, _ = _run("paged", prompts=prompts, max_new=9,
+                          spec_append=False, **paged)
+    assert recl == recl_off
+    assert _counter(rsnap, "kvcache/spec_pages_alloc") == 1
+    assert _counter(rsnap, "kvcache/spec_pages_reclaimed") == 1
+    assert not reng._spec_pending
+    # the reclaimed page went back to the free list with the slot
+    assert reng._block_pool.in_use == \
+        sum(len(e["blocks"]) for e in reng._prefix_cache.values())
+
+
+def test_spec_append_defers_when_pool_full():
+    """A full free list must defer speculation to the synchronous append
+    path (which can evict parked prefixes), never evict or raise itself
+    — and stay bit-identical. num_blocks=3 leaves 2 usable pages: a
+    short request parks its page in the prefix cache, so when the long
+    request hits its page boundary the free list is empty; only the
+    synchronous append (one wave later) may evict the parked page."""
+    cfg, params = _setup()
+
+    def go(spec):
+        obs.reset_registry()
+        eng = ServingEngine(cfg, params, EngineConfig(
+            max_slots=2, max_seq=64, kv_layout="paged", block_size=16,
+            num_blocks=3, host_pool_blocks=0, spec_append=spec))
+        eng.submit([50] * 8, max_new_tokens=4)    # parks 1 page early
+        eng.submit([51] * 8, max_new_tokens=12)   # crosses the boundary
+        gens = {tuple(r.prompt): tuple(r.generated) for r in eng.run()}
+        return gens, obs.get_registry().snapshot()
+
+    on, osnap = go(True)
+    off, _ = go(False)
+    assert on == off
+    # the boundary wave found the pool full: speculation deferred, the
+    # synchronous path evicted the parked prefix and appended
+    assert _counter(osnap, "kvcache/spec_pages_alloc") == 0
+    assert _counter(osnap, "kvcache/prefix_evictions") >= 1
+    assert _counter(osnap, "kvcache/blocks_appended") >= 1
+
+
+def test_prefetch_depth_bounds_inflight():
+    """--prefetch-depth 1 on the cold stream: never more than one
+    transfer in flight, still bit-identical, still hits."""
+    paged = dict(block_size=16, num_blocks=4, host_pool_blocks=16)
+    ref, _, _ = _ref_run()
+    d1, dsnap, deng = _run("paged", prefetch_depth=1, **paged)
+    assert d1 == ref
+    assert deng._prefetch.depth == 1
+    assert _counter(dsnap, "kvcache/prefetch_issued") >= 1
+    assert _counter(dsnap, "kvcache/prefetch_hits") >= 1
+
+
+def test_wave_hooks_fire_per_decode_wave():
+    """wave_hooks run once per decode wave in both layouts (the
+    streaming exporter's attachment point)."""
+    cfg, params = _setup()
+    for layout, kw in (("slotted", {}),
+                       ("paged", dict(block_size=16, num_blocks=16))):
+        obs.reset_registry()
+        eng = ServingEngine(cfg, params, EngineConfig(
+            max_slots=2, max_seq=64, kv_layout=layout, **kw))
+        calls = []
+        eng.wave_hooks.append(lambda: calls.append(1))
+        eng.submit([60] * 8, max_new_tokens=4)
+        eng.run()
+        waves = int(obs.get_registry().counter(
+            "engine/decode_steps").value)
+        assert waves >= 1 and len(calls) == waves

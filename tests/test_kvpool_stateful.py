@@ -1,8 +1,9 @@
 """Stateful property suite for the two-tier KV block pool.
 
 A single model (:class:`_TwoTierModel`) drives random interleavings of
-alloc / incref (prefix share) / CoW / free / offload / swap-in against a
-real ``BlockPool`` + ``HostBlockPool`` pair, shadowing them with pure
+alloc / incref (prefix share) / CoW / free / offload / swap-in / prefetch
+issue / resolve / stale-sweep against a real ``BlockPool`` +
+``HostBlockPool`` + ``PrefetchEngine`` triple, shadowing them with pure
 Python bookkeeping, and checks after every step:
 
   * refcount conservation — the pool's refcounts equal the model's for
@@ -15,7 +16,13 @@ Python bookkeeping, and checks after every step:
     it (a source block whose generation is unchanged since offload must
     still be free; any reuse bumped it);
   * host-tier integrity — block accounting matches the entries, capacity
-    is never exceeded, eviction is LRU.
+    is never exceeded, eviction is LRU;
+  * prefetch integrity — issuing a transfer pins nothing (no device
+    refcount change, host LRU order untouched), a pending transfer never
+    aliases its source (it holds the issue-time snapshot even after the
+    host entry is evicted and the device blocks recycled), and the
+    engine's transfer conservation (resolved + discarded + in-flight ==
+    issued) holds at every step.
 
 The hypothesis rule-based state machine explores random interleavings
 when hypothesis is installed; the deterministic fallback walks (seeded
@@ -25,6 +32,7 @@ import numpy as np
 import pytest
 
 from repro.kvcache.paged import BlockPool, HostBlockPool, PoolExhausted
+from repro.kvcache.transfer import PrefetchEngine
 
 try:
     from hypothesis import settings
@@ -40,13 +48,16 @@ class _TwoTierModel:
     """Shadow model + operation vocabulary shared by the hypothesis state
     machine and the deterministic fallback walks."""
 
-    def __init__(self, num_blocks: int, host_blocks: int):
+    def __init__(self, num_blocks: int, host_blocks: int,
+                 prefetch_depth: int = 2):
         self.pool = BlockPool(num_blocks)
         self.host = HostBlockPool(host_blocks)
+        self.prefetch = PrefetchEngine(self.host, prefetch_depth)
         self.tables = []          # live mappings: lists of block ids
         self.refs = {}            # block -> model refcount
         self.content = {}         # block -> payload currently on "device"
         self.expected = {}        # host key -> (payloads, gens) snapshot
+        self.inflight = {}        # issued key -> issue-time snapshot
         self._payload = 0.0
         self._key = 0
 
@@ -175,6 +186,56 @@ class _TwoTierModel:
             self.content[b] = p
         self.tables.append(list(ids))
 
+    def op_prefetch_issue(self, i: int):
+        """Issue a host->device prefetch for a resident host entry: must
+        pin nothing and leave the host tier's LRU order untouched."""
+        if not self.expected:
+            return
+        key = sorted(self.expected)[i % len(self.expected)]
+        lru_before = list(self.host.keys())
+        ok = self.prefetch.issue(key)
+        if ok:
+            assert key not in self.inflight
+            self.inflight[key] = self.expected[key]
+        else:
+            # the only legal refusals: already in flight, or at depth
+            assert key in self.inflight or \
+                self.prefetch.in_flight >= self.prefetch.depth
+        assert list(self.host.keys()) == lru_before, \
+            "prefetch issue perturbed the host LRU order"
+
+    def op_prefetch_resolve(self, i: int):
+        """Take a transfer whose host entry is still resident (the
+        engine's hit path): the payload must equal the issue-time
+        snapshot and the generation tags must still match the entry."""
+        live = [k for k in sorted(self.inflight) if k in self.expected]
+        if not live:
+            return
+        key = live[i % len(live)]
+        tr = self.prefetch.take(key)
+        assert tr is not None
+        payloads, gens = self.inflight.pop(key)
+        assert tr["gens"] == gens
+        got = np.asarray(tr["k"]).reshape(-1)
+        np.testing.assert_array_equal(got, np.asarray(payloads, np.float32))
+        np.testing.assert_array_equal(np.asarray(tr["v"]).reshape(-1),
+                                      got + 0.5)
+
+    def op_prefetch_sweep(self):
+        """Discard transfers whose host entry churned since issue. Before
+        the sweep, every stale transfer must still hold its pristine
+        issue-time snapshot (no aliasing while pending)."""
+        stale = [k for k in self.inflight if k not in self.expected]
+        for k in stale:
+            payloads, _ = self.inflight[k]
+            pend = self.prefetch._inflight[k]
+            np.testing.assert_array_equal(
+                np.asarray(pend["k"]).reshape(-1),
+                np.asarray(payloads, np.float32))
+        assert self.prefetch.sweep() == len(stale)
+        for k in stale:
+            del self.inflight[k]
+
     def op_bad_calls(self, b: int):
         """Double-free and incref-of-free must raise and mutate nothing."""
         b = 1 + (b % (self.pool.num_blocks - 1))
@@ -191,12 +252,14 @@ class _TwoTierModel:
     def check(self):
         self.pool.check_invariants()
         self.host.check_invariants()
+        self.prefetch.check_invariants()
         for b in range(1, self.pool.num_blocks):
             assert self.pool.refcount(b) == self.refs.get(b, 0), \
                 f"refcount drift on block {b}"
         assert set(self.host.keys()) == set(self.expected)
         assert self.host.used_blocks == \
             sum(len(p) for p, _ in self.expected.values())
+        assert set(self.prefetch.keys()) == set(self.inflight)
 
     def drain(self):
         while self.tables:
@@ -206,7 +269,8 @@ class _TwoTierModel:
         assert self.pool.available == self.pool.capacity
 
 
-_OPS = ("alloc", "share", "cow", "release", "offload", "swap_in", "bad")
+_OPS = ("alloc", "share", "cow", "release", "offload", "swap_in", "bad",
+        "pf_issue", "pf_resolve", "pf_sweep")
 
 
 def _walk(model: _TwoTierModel, rng, steps: int):
@@ -225,6 +289,12 @@ def _walk(model: _TwoTierModel, rng, steps: int):
             model.op_offload(i)
         elif op == "swap_in":
             model.op_swap_in(i)
+        elif op == "pf_issue":
+            model.op_prefetch_issue(i)
+        elif op == "pf_resolve":
+            model.op_prefetch_resolve(i)
+        elif op == "pf_sweep":
+            model.op_prefetch_sweep()
         else:
             model.op_bad_calls(i)
         model.check()
@@ -271,6 +341,54 @@ def test_swap_in_survives_source_block_recycling():
     m.drain()
 
 
+def test_prefetch_stale_generation_discard():
+    """A key re-offloaded with different pages after the transfer was
+    issued must be swept as stale (generation mismatch), never resolved:
+    the transfer belongs to a dead page lifetime even though the key is
+    host-resident again."""
+    m = _TwoTierModel(8, 4)
+    m.op_alloc(2)
+    m.op_offload(0)                      # entry-1, gens A
+    key = sorted(m.expected)[0]
+    m.op_prefetch_issue(0)
+    assert key in m.prefetch
+    old_gens = m.expected[key][1]
+    # swap the entry back in (host copy consumed), then re-offload the
+    # same logical key with recycled blocks -> new generations
+    m.op_swap_in(0)
+    payloads = tuple(m.content[b] for b in m.tables[0])
+    gens = tuple((b, m.pool.generation(b)) for b in m.tables[0])
+    k, v = m._pages(payloads)
+    t = m.tables.pop(0)
+    m.host.offload(key, k, v, first=7, gens=gens)
+    m.expected[key] = (payloads, gens)
+    m.pool.free(t)
+    for b in t:
+        del m.refs[b]
+    assert gens != old_gens
+    # model bookkeeping: the in-flight snapshot now disagrees with the
+    # host entry, so the sweep must discard exactly it
+    assert m.prefetch.sweep() == 1
+    del m.inflight[key]
+    assert key not in m.prefetch
+    assert m.prefetch.discarded == 1
+    m.check()
+    m.drain()
+
+
+def test_prefetch_resolve_mid_flight_is_bounded_wait():
+    """Taking a transfer immediately after issue (the in-flight-wait
+    path) still yields the exact snapshot: JAX sequences the read after
+    the async copy, so an early consumer waits, never corrupts."""
+    m = _TwoTierModel(8, 4)
+    m.op_alloc(3)
+    m.op_offload(0)
+    m.op_prefetch_issue(0)
+    m.op_prefetch_resolve(0)     # asserts payload == snapshot inside
+    m.check()
+    m.drain()
+
+
 # ---------------------------------------------------------------------------
 # hypothesis rule-based state machine
 # ---------------------------------------------------------------------------
@@ -305,6 +423,18 @@ if HAVE_HYPOTHESIS:
         @rule(i=st.integers(0, 1 << 16))
         def swap_in(self, i):
             self.model.op_swap_in(i)
+
+        @rule(i=st.integers(0, 1 << 16))
+        def prefetch_issue(self, i):
+            self.model.op_prefetch_issue(i)
+
+        @rule(i=st.integers(0, 1 << 16))
+        def prefetch_resolve(self, i):
+            self.model.op_prefetch_resolve(i)
+
+        @rule()
+        def prefetch_sweep(self):
+            self.model.op_prefetch_sweep()
 
         @rule(b=st.integers(0, 1 << 16))
         def bad_calls(self, b):

@@ -197,6 +197,75 @@ def test_dispatch_metrics_flow_from_shared_attention(fresh_registry):
     assert reg.counter("moska/dropped_queries").value == 0
 
 
+def test_jit_inc_per_labels_counters_by_traced_value(fresh_registry):
+    """jit_inc_per forms the metric name host-side from a traced label —
+    the per-layer counter mechanism (the label is a scan carry, not a
+    static string)."""
+    reg = fresh_registry
+    obs.enable_jit_metrics(True)
+
+    @jax.jit
+    def f(x):
+        def body(i, acc):
+            obs.jit_inc_per("t/drops_by_layer", i, i * 10)
+            return acc + i
+        return jax.lax.fori_loop(0, 3, body, x)
+
+    f(jnp.asarray(0)).block_until_ready()
+    assert reg.get("t/drops_by_layer/L0").value == 0
+    assert reg.get("t/drops_by_layer/L1").value == 10
+    assert reg.get("t/drops_by_layer/L2").value == 20
+    assert reg.get("t/drops_by_layer/L3") is None
+
+
+def test_per_layer_dispatch_metrics_from_shared_attention(fresh_registry):
+    """With layer_idx supplied, the dispatch path files utilization and
+    dropped-query counts under per-layer names as well as the totals."""
+    from repro.core.router import Routing
+    from repro.core.shared_attention import shared_attention_batched
+    reg = fresh_registry
+    obs.enable_jit_metrics(True)
+    G, K, E, C, H, KH, D = 4, 2, 4, 8, 8, 2, 16
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (E, C, KH, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (E, C, KH, D))
+    q = jax.random.normal(jax.random.fold_in(key, 3), (G, 1, H, D))
+    ids = jnp.tile(jnp.arange(K, dtype=jnp.int32)[None], (G, 1))
+    r = Routing(ids, jnp.zeros((G, K)), jnp.zeros((G, E)))
+    jax.block_until_ready(shared_attention_batched(
+        q, k, v, r, capacity=G * K, layer_idx=jnp.asarray(5)))
+    util = reg.get("moska/dispatch_capacity_utilization_by_layer/L5")
+    assert util is not None and util.count == 1
+    assert reg.counter("moska/dropped_queries_by_layer/L5").value == 0
+    # the totals still record alongside the per-layer views
+    assert reg.counter("moska/dispatched_queries").value == G * K
+
+
+def test_streaming_exporter_flush_cadence(fresh_registry, tmp_path):
+    """StreamingExporter flushes every Nth tick, atomically, and the
+    on-disk snapshot tracks the registry state at flush time."""
+    reg = fresh_registry
+    path = str(tmp_path / "live.json")
+    exp = obs.StreamingExporter(path, every=2, reg=reg)
+    with pytest.raises(ValueError):
+        obs.StreamingExporter(path, every=0)
+
+    reg.inc("waves")
+    assert exp.tick() is False          # tick 1: no flush yet
+    import os
+    assert not os.path.exists(path)
+    reg.inc("waves")
+    assert exp.tick() is True           # tick 2: flush
+    assert obs.load(path).counter("waves").value == 2
+    assert not os.path.exists(path + ".tmp")    # atomic replace completed
+    reg.inc("waves")
+    exp.tick()
+    assert obs.load(path).counter("waves").value == 2   # tick 3: stale
+    exp.tick()
+    assert obs.load(path).counter("waves").value == 3   # tick 4: fresh
+    assert (exp.ticks, exp.flushes) == (4, 2)
+
+
 # ---------------------------------------------------------------------------
 # kernels/lse_merge.py edge cases
 # ---------------------------------------------------------------------------

@@ -210,6 +210,36 @@ def test_affinity_still_prefers_resident_corpus():
     assert [r.corpus_id for r in admitted] == ["A", "A"]
 
 
+def test_lookahead_previews_admission_order_without_mutating():
+    """lookahead(n) mirrors affinity order (resident corpus first, then
+    the flip corpus) and never admits, counts skips, or edits the queue
+    — the prefetch engine's hint must be side-effect free."""
+    sched = Scheduler(SchedulerConfig(max_slots=1))
+    sched.submit([1], 1, "A")
+    sched.submit([2], 1, "B")
+    sched.submit([3], 1, "A")
+    sched.submit([4], 1, "B")
+    admitted = sched.schedule()          # residency -> A, [1] admitted
+    assert [r.corpus_id for r in admitted] == ["A"]
+
+    before = [(r.uid, r.skips) for r in sched.queue]
+    # resident-corpus traffic first (queue order), then the flip corpus
+    assert [r.prompt for r in sched.lookahead(3)] == [[3], [2], [4]]
+    assert [r.prompt for r in sched.lookahead(1)] == [[3]]
+    assert sched.lookahead(0) == []
+    assert [(r.uid, r.skips) for r in sched.queue] == before
+    assert sched.resident_corpus == "A"
+
+    # drain: the remaining admission sequence matches the preview
+    seq = []
+    while not sched.idle:
+        for r in sched.schedule():
+            seq.append(r.prompt)
+        for r in list(sched.active()):
+            sched.record_token(r, 7)
+    assert seq == [[3], [2], [4]]
+
+
 # ---------------------------------------------------------------------------
 # hypothesis property versions
 # ---------------------------------------------------------------------------

@@ -192,6 +192,23 @@ def test_headline_gain_exceeds_100x():
     assert gains["LongHeads"] > 100.0
 
 
+def test_size_host_pool_blocks():
+    """Host-tier auto-sizing: cover the prefix working set minus what
+    the device pool can keep resident (``--host-pool-blocks auto``)."""
+    # elastic device pool: host tier sized to the full working set
+    assert A.size_host_pool_blocks(128, 16) == 8
+    assert A.size_host_pool_blocks(129, 16) == 9          # ceil
+    # fixed pool: spare device blocks (capacity - null - active) offset
+    # the host requirement
+    assert A.size_host_pool_blocks(128, 16, device_pool_blocks=16,
+                                   active_tokens=128) == 1
+    assert A.size_host_pool_blocks(128, 16, device_pool_blocks=64,
+                                   active_tokens=0) == 0  # all fits
+    assert A.size_host_pool_blocks(0, 16) == 0
+    with pytest.raises(ValueError):
+        A.size_host_pool_blocks(128, 0)
+
+
 # ---------------------------------------------------------------------------
 # disaggregated shard_map path == pjit path (1-device degenerate mesh)
 # ---------------------------------------------------------------------------
